@@ -1,0 +1,69 @@
+"""Shared benchmark plumbing: simulated tiers + corpora + CSV emission.
+
+Every benchmark maps to one paper table/figure and prints
+``name,<key>=<val>,...`` CSV rows plus a ``derived`` summary line comparing
+against the paper's claim.  ``TIME_SCALE`` uniformly accelerates the storage
+simulation (all ratios preserved); the default keeps the full suite ~minutes.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+from typing import Dict, List, Tuple
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import make_storage
+from repro.core import records
+from repro.core.stats import IOTracer
+
+TIME_SCALE = float(os.environ.get("REPRO_TIME_SCALE", "0.05"))
+RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "reports")
+# RAM-backed scratch: the simulator's pacing must dominate, not the real VM
+# disk. /dev/shm gives GB/s backing so even the 'optane' tier is honest.
+SCRATCH = "/dev/shm" if os.path.isdir("/dev/shm") else None
+
+
+class BenchEnv:
+    """Temp-dir backed set of simulated storage tiers with one corpus each."""
+
+    def __init__(self, tiers=("hdd", "ssd", "optane", "lustre"),
+                 n_images=256, mean_hw=(48, 48), seed=0,
+                 time_scale=None):
+        self._tmp = tempfile.TemporaryDirectory(dir=SCRATCH)
+        self.tracers: Dict[str, IOTracer] = {}
+        self.storages = {}
+        self.corpora: Dict[str, Tuple[List[str], List[int]]] = {}
+        for tier in tiers:
+            tracer = IOTracer(0.25)
+            st = make_storage(tier, os.path.join(self._tmp.name, tier),
+                              tracer,
+                              time_scale=TIME_SCALE if time_scale is None
+                              else time_scale)
+            paths, labels = records.write_image_dataset(
+                st, n_images, mean_hw=mean_hw, seed=seed)
+            tracer.reset()
+            self.tracers[tier] = tracer
+            self.storages[tier] = st
+            self.corpora[tier] = (paths, labels)
+
+    def close(self):
+        self._tmp.cleanup()
+
+
+def emit(name: str, rows: List[str], derived: str = "") -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out = []
+    for r in rows:
+        line = f"{name},{r}"
+        print(line)
+        out.append(line)
+    if derived:
+        line = f"{name},derived,{derived}"
+        print(line)
+        out.append(line)
+    with open(os.path.join(RESULTS_DIR, "bench_results.csv"), "a") as f:
+        f.write("\n".join(out) + "\n")

@@ -1,0 +1,42 @@
+"""Fig. 4 analogue: micro-benchmark ingestion bandwidth vs reader threads
+(full pipeline: read + decode + resize + batch), per storage tier."""
+from __future__ import annotations
+
+from repro.core.microbench import thread_scaling_sweep
+
+from .common import BenchEnv, emit
+
+
+def run(tiers=("hdd", "ssd", "optane", "lustre"), preprocess=True,
+        name="fig4_threads") -> dict:
+    # paper: ImageNet subset, median image 112 KB (~190x190x3 raw)
+    env = BenchEnv(tiers=tiers, n_images=128, mean_hw=(190, 190),
+                   time_scale=1.0)
+    rows, speedups = [], {}
+    for tier in tiers:
+        st = env.storages[tier]
+        paths, _ = env.corpora[tier]
+        st.drop_caches()
+        results = thread_scaling_sweep(
+            st, paths, thread_counts=(1, 2, 4, 8), repeats=3,
+            batch_size=32, preprocess=preprocess, out_hw=(32, 32))
+        base = results[0].images_per_s
+        sp = {r.threads: r.images_per_s / base for r in results}
+        speedups[tier] = sp
+        for r in results:
+            rows.append(
+                f"{tier},threads={r.threads},img_s={r.images_per_s:.1f},"
+                f"mb_s={r.mb_per_s:.2f},speedup={r.images_per_s / base:.2f}")
+    derived = (
+        f"hdd 2/4/8-thread speedup={speedups.get('hdd', {}).get(2, 0):.2f}/"
+        f"{speedups.get('hdd', {}).get(4, 0):.2f}/"
+        f"{speedups.get('hdd', {}).get(8, 0):.2f} "
+        f"(paper 1.65/1.95/2.3); lustre 8-thread="
+        f"{speedups.get('lustre', {}).get(8, 0):.2f} (paper 7.8)")
+    emit(name, rows, derived)
+    env.close()
+    return speedups
+
+
+if __name__ == "__main__":
+    run()

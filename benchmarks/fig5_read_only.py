@@ -1,0 +1,13 @@
+"""Fig. 5 analogue: pipeline with ONLY tf.read() (no decode/resize) —
+isolates preprocessing cost from raw I/O."""
+from __future__ import annotations
+
+from . import fig4_threads
+
+
+def run() -> None:
+    fig4_threads.run(preprocess=False, name="fig5_read_only")
+
+
+if __name__ == "__main__":
+    run()

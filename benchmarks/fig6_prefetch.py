@@ -1,0 +1,83 @@
+"""Fig. 6 analogue: AlexNet mini-app runtime, prefetch on/off x threads x tier.
+
+The paper's central claim: with prefetch(1), runtime becomes independent of
+threads/tier (input pipeline fully hidden behind per-batch compute)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.alexnet_mini import AlexNetConfig
+
+# heavier FC stack: per-batch compute ~0.3 s, comfortably above per-batch
+# I/O on the fast tiers but comparable to single-thread HDD (paper regime)
+ACFG = AlexNetConfig(name="alexnet-fig6", in_hw=128,
+                     filters=(64, 128, 192, 128, 128), fc=(1024, 1024))
+from repro.core.dataset import image_pipeline
+from repro.models import alexnet as A
+
+from .common import BenchEnv, emit
+
+
+def make_train_step():
+    @jax.jit
+    def step(params, imgs, labels):
+        loss, g = jax.value_and_grad(
+            lambda p: A.loss_fn(p, imgs, labels, ACFG))(params)
+        new_p = jax.tree.map(lambda p, gg: p - 1e-4 * gg, params, g)
+        return new_p, loss
+
+    return step
+
+
+def run_epoch(st, paths, labels, *, threads, prefetch, step, params,
+              batch=16, n_batches=6):
+    ds = image_pipeline(
+        st, paths, labels, batch_size=batch, num_parallel_calls=threads,
+        prefetch=prefetch, out_hw=(ACFG.in_hw, ACFG.in_hw), seed=0,
+        repeat=True)
+    it = iter(ds)
+    # warmup compile outside the timed region
+    imgs, lbls = next(it)
+    params, _ = step(params, jnp.asarray(imgs), jnp.asarray(lbls))
+    t0 = time.monotonic()
+    for _ in range(n_batches):
+        imgs, lbls = next(it)
+        params, loss = step(params, jnp.asarray(imgs), jnp.asarray(lbls))
+        loss.block_until_ready()
+    return time.monotonic() - t0
+
+
+def run() -> None:
+    # Caltech-101-like corpus: median ~12 KB images, unscaled tier model
+    env = BenchEnv(tiers=("hdd", "ssd", "optane"), n_images=160,
+                   mean_hw=(64, 64), time_scale=1.0)
+    step = make_train_step()
+    params = A.init_params(jax.random.PRNGKey(0), ACFG)
+    rows = []
+    times = {}
+    for tier in ("hdd", "ssd", "optane"):
+        st = env.storages[tier]
+        paths, labels = env.corpora[tier]
+        for threads in (1, 4):
+            for pf in (0, 1):
+                t = run_epoch(st, paths, labels, threads=threads,
+                              prefetch=pf, step=step, params=params)
+                times[(tier, threads, pf)] = t
+                rows.append(f"{tier},threads={threads},prefetch={pf},"
+                            f"runtime_s={t:.2f}")
+    # prefetch-hides-io check: spread of prefetch=1 runtimes across configs
+    pf1 = [v for k, v in times.items() if k[2] == 1]
+    spread = (max(pf1) - min(pf1)) / max(min(pf1), 1e-9)
+    excess = times[("hdd", 1, 0)] / times[("hdd", 1, 1)]
+    emit("fig6_prefetch", rows,
+         f"prefetch=1 runtime spread across tiers/threads={spread:.2%} "
+         f"(paper: ~0 — I/O fully hidden); hdd 1-thread no-prefetch excess="
+         f"{excess:.2f}x")
+    env.close()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Fig. 7 analogue: mini-app training throughput vs batch size (8 threads)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dataset import image_pipeline
+from repro.models import alexnet as A
+
+from .common import BenchEnv, emit
+from .fig6_prefetch import ACFG, make_train_step
+
+
+def run() -> None:
+    env = BenchEnv(tiers=("ssd",), n_images=192, mean_hw=(48, 48))
+    st = env.storages["ssd"]
+    paths, labels = env.corpora["ssd"]
+    step = make_train_step()
+    params = A.init_params(jax.random.PRNGKey(0), ACFG)
+    rows = []
+    n_images = 96
+    for batch in (8, 16, 32, 64):
+        for pf in (0, 1):
+            ds = image_pipeline(
+                st, paths, labels, batch_size=batch, num_parallel_calls=8,
+                prefetch=pf, out_hw=(ACFG.in_hw, ACFG.in_hw), repeat=True)
+            it = iter(ds)
+            imgs, lbls = next(it)
+            params, _ = step(params, jnp.asarray(imgs), jnp.asarray(lbls))
+            t0 = time.monotonic()
+            for _ in range(n_images // batch):
+                imgs, lbls = next(it)
+                p, loss = step(params, jnp.asarray(imgs), jnp.asarray(lbls))
+                loss.block_until_ready()
+            t = time.monotonic() - t0
+            rows.append(f"batch={batch},prefetch={pf},runtime_s={t:.2f},"
+                        f"img_s={n_images / t:.1f}")
+    emit("fig7_batchsize", rows,
+         "paper: runtime decreases with batch size (better accel utilization)")
+    env.close()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,130 @@
+"""Fig. 9/10 analogue: checkpoint-to-tier runtimes + burst buffer (the 2.6x),
+with dstat-style write traces on each tier (Fig. 10).
+
+Protocol (scaled): N_ITERS training iterations, checkpoint every CKPT_EVERY,
+sync to device; compare no-ckpt / hdd / ssd / optane / burst-buffer
+(optane stage + async drain to hdd).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.alexnet_mini import AlexNetConfig
+from repro.core import make_storage
+from repro.core.burst_buffer import BurstBufferCheckpointer, DirectCheckpointer
+from repro.core.dataset import image_pipeline
+from repro.core.stats import IOTracer
+from repro.models import alexnet as A
+
+from .common import emit, BenchEnv
+
+# bigger FC stack -> ~19 MB checkpoint (paper: ~600 MB vs GPU-scale compute;
+# same compute:checkpoint ratio ballpark at our scale)
+CFG = AlexNetConfig(name="alexnet-ckpt", in_hw=64,
+                    filters=(16, 32, 48, 32, 32), fc=(2048, 2048))
+N_ITERS = 30
+CKPT_EVERY = 10
+CKPT_TIME_SCALE = float(os.environ.get("REPRO_CKPT_TIME_SCALE", "4.0"))  # >1 slows the ckpt tiers: reproduces the paper 600MB-ckpt-vs-GPU-step ratio at our 19MB/CPU scale
+
+
+def make_step():
+    @jax.jit
+    def step(params, imgs, labels):
+        loss, g = jax.value_and_grad(
+            lambda p: A.loss_fn(p, imgs, labels, CFG))(params)
+        return jax.tree.map(lambda p, gg: p - 1e-4 * gg, params, g), loss
+
+    return step
+
+
+def run_training(checkpointer, data_st, paths, labels, step):
+    params = A.init_params(jax.random.PRNGKey(0), CFG)
+    ds = image_pipeline(data_st, paths, labels, batch_size=16,
+                        num_parallel_calls=4, prefetch=1,
+                        out_hw=(CFG.in_hw, CFG.in_hw), repeat=True)
+    it = iter(ds)
+    imgs, lbls = next(it)
+    params, _ = step(params, jnp.asarray(imgs), jnp.asarray(lbls))  # compile
+    t0 = time.monotonic()
+    for i in range(1, N_ITERS + 1):
+        imgs, lbls = next(it)
+        params, loss = step(params, jnp.asarray(imgs), jnp.asarray(lbls))
+        loss.block_until_ready()
+        if checkpointer is not None and i % CKPT_EVERY == 0:
+            checkpointer.save(i, {"params": params})
+    runtime = time.monotonic() - t0
+    drain_s = 0.0
+    if checkpointer is not None:
+        t1 = time.monotonic()
+        checkpointer.wait()
+        drain_s = time.monotonic() - t1
+        checkpointer.close()
+    return runtime, drain_s
+
+
+def run() -> None:
+    env = BenchEnv(tiers=("ssd",), n_images=128, mean_hw=(48, 48))
+    data_st, (paths, labels) = env.storages["ssd"], env.corpora["ssd"]
+    step = make_step()
+    rows, runtimes, tracers = [], {}, {}
+
+    from .common import SCRATCH
+    with tempfile.TemporaryDirectory(dir=SCRATCH) as root:
+        def tier(name, kind=None):
+            tr = IOTracer(0.25)
+            st = make_storage(kind or name, os.path.join(root, name + "_ck"),
+                              tr, time_scale=CKPT_TIME_SCALE)
+            tracers[name] = tr
+            return st
+
+        # baseline: no checkpoints
+        t, _ = run_training(None, data_st, paths, labels, step)
+        runtimes["none"] = t
+        rows.append(f"target=none,runtime_s={t:.2f},blocked_s=0")
+
+        for name in ("hdd", "ssd", "optane"):
+            ck = DirectCheckpointer(tier(name), f"{name}/m", sync=True)
+            t, _ = run_training(ck, data_st, paths, labels, step)
+            runtimes[name] = t
+            rows.append(f"target={name},runtime_s={t:.2f},"
+                        f"blocked_s={sum(ck.blocked_s):.2f}")
+
+        fast = tier("optane_bb", "optane")
+        slow_tr = IOTracer(0.25)
+        slow = make_storage("hdd", os.path.join(root, "hdd_bb"), slow_tr,
+                            time_scale=CKPT_TIME_SCALE)
+        tracers["hdd_bb"] = slow_tr
+        bb = BurstBufferCheckpointer(fast, slow, "bb/m", sync=True)
+        t, drain = run_training(bb, data_st, paths, labels, step)
+        runtimes["burst_buffer"] = t
+        rows.append(f"target=burst_buffer,runtime_s={t:.2f},"
+                    f"blocked_s={sum(bb.blocked_s):.2f},"
+                    f"post_run_drain_s={drain:.2f}")
+
+        speedup = runtimes["hdd"] / runtimes["burst_buffer"]
+        vs_optane = runtimes["burst_buffer"] / runtimes["optane"]
+        emit("fig9_checkpoint", rows,
+             f"burst-buffer speedup vs direct-hdd={speedup:.2f}x "
+             f"(paper 2.6x); bb/optane runtime ratio={vs_optane:.2f} "
+             f"(paper ~1.0)")
+
+        # Fig. 10: dstat write traces
+        trace_rows = []
+        for name in ("hdd", "optane_bb", "hdd_bb"):
+            for r in tracers[name].timeline():
+                if r["write_mb"] > 0:
+                    trace_rows.append(
+                        f"device={name},t={r['t']:.2f},write_mb={r['write_mb']:.2f}")
+        emit("fig10_trace", trace_rows,
+             "hdd_bb (drain) writes lag optane_bb (stage) and extend past "
+             "training end — the paper's Fig. 10 pattern")
+    env.close()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""§Roofline: render the per-cell table from the dry-run JSON artifact."""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+
+def run(path: str = "reports/dryrun.json") -> None:
+    if not os.path.exists(path):
+        print(f"roofline_table,skipped,no {path} (run repro.launch.dryrun first)")
+        return
+    cells = json.load(open(path))
+    rows = []
+    for r in sorted(cells, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        if r.get("status") != "ok":
+            rows.append(f"{r['arch']},{r['shape']},{r['mesh']},ERROR")
+            continue
+        mem = r.get("memory_per_device") or {}
+        peak = (mem.get("argument", 0) + mem.get("temp", 0)) / 2**30
+        rows.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},"
+            f"t_compute_ms={r['t_compute']*1e3:.2f},"
+            f"t_memory_ms={r['t_memory']*1e3:.2f},"
+            f"t_collective_ms={r['t_collective']*1e3:.2f},"
+            f"bottleneck={r['bottleneck']},"
+            f"mfu_bound={r['mfu']:.3f},"
+            f"useful_flops_ratio={r['useful_flops_ratio']:.2f},"
+            f"peak_gib={peak:.1f}"
+        )
+    n_ok = sum(1 for r in cells if r.get("status") == "ok")
+    emit("roofline_table", rows, f"{n_ok}/{len(cells)} cells compiled")
+
+
+if __name__ == "__main__":
+    run()

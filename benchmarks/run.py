@@ -1,0 +1,36 @@
+"""Benchmark suite — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig9       # one
+
+Prints ``name,key=val,...`` CSV (also appended to reports/bench_results.csv)
+with a ``derived`` line per benchmark comparing against the paper's claim.
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+ALL = ["table1", "fig4", "fig5", "fig6", "fig7", "fig9", "roofline"]
+
+
+def main() -> None:
+    which = sys.argv[1:] or ALL
+    # fresh results file
+    os.makedirs("reports", exist_ok=True)
+    from . import (fig4_threads, fig5_read_only, fig6_prefetch,
+                   fig7_batchsize, fig9_checkpoint, roofline_table,
+                   table1_ior)
+    mods = dict(table1=table1_ior, fig4=fig4_threads, fig5=fig5_read_only,
+                fig6=fig6_prefetch, fig7=fig7_batchsize,
+                fig9=fig9_checkpoint, roofline=roofline_table)
+    for name in which:
+        t0 = time.monotonic()
+        print(f"# --- {name} ---", flush=True)
+        mods[name].run()
+        print(f"# {name} done in {time.monotonic()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

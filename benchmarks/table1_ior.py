@@ -1,0 +1,44 @@
+"""Table I analogue: raw device bandwidth of each simulated tier.
+
+IOR-style protocol: 8 parallel sequential streams of 8 MB each (IOR reaches
+device max via concurrency; our tier model exposes max aggregate bandwidth
+the same way).  The backing files stay in the host page cache on purpose —
+the *simulated* device time must dominate the measurement.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+from .common import BenchEnv, emit
+
+N_STREAMS = 8
+STREAM_MB = 8
+
+
+def run() -> None:
+    env = BenchEnv(n_images=1, time_scale=1.0)
+    rows = []
+    total_mb = N_STREAMS * STREAM_MB
+    for tier, st in env.storages.items():
+        data = b"\xab" * (STREAM_MB << 20)
+        with ThreadPoolExecutor(N_STREAMS) as pool:
+            t0 = time.monotonic()
+            list(pool.map(lambda i: st.write_file(f"ior{i}.bin", data, sync=True),
+                          range(N_STREAMS)))
+            tw = time.monotonic() - t0
+            t0 = time.monotonic()
+            list(pool.map(lambda i: st.read_file(f"ior{i}.bin"),
+                          range(N_STREAMS)))
+            tr = time.monotonic() - t0
+        rows.append(f"{tier},read_mb_s={total_mb / tr:.1f},"
+                    f"write_mb_s={total_mb / tw:.1f}")
+        for i in range(N_STREAMS):
+            st.remove(f"ior{i}.bin")
+    emit("table1_ior", rows,
+         "paper: hdd 163/133, ssd 281/195, optane 1603/512, lustre 1969/992 MB/s")
+    env.close()
+
+
+if __name__ == "__main__":
+    run()

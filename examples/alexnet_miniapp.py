@@ -1,0 +1,64 @@
+"""The paper's AlexNet mini-application (§III-B), end to end.
+
+    PYTHONPATH=src python examples/alexnet_miniapp.py [--tier hdd|ssd|optane]
+
+Generates a Caltech-101-like corpus on a simulated tier, trains AlexNet with
+the full input pipeline, and prints per-step data-wait vs compute (the
+paper's prefetch-overlap observable) plus a dstat-style I/O trace.
+"""
+import argparse, os, sys, tempfile
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALEXNET_SMOKE as CFG
+from repro.core import IOTracer, image_pipeline, make_storage
+from repro.core import records
+from repro.models import alexnet as A
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tier", default="ssd")
+    ap.add_argument("--threads", type=int, default=4)
+    ap.add_argument("--prefetch", type=int, default=1)
+    ap.add_argument("--steps", type=int, default=10)
+    args = ap.parse_args()
+
+    tracer = IOTracer(0.25)
+    st = make_storage(args.tier, tempfile.mkdtemp(), tracer, time_scale=0.2)
+    paths, labels = records.write_image_dataset(
+        st, 128, mean_hw=(64, 64), n_classes=CFG.n_classes)
+    tracer.reset()
+
+    ds = image_pipeline(st, paths, labels, batch_size=16,
+                        num_parallel_calls=args.threads,
+                        prefetch=args.prefetch,
+                        out_hw=(CFG.in_hw, CFG.in_hw), repeat=True)
+
+    params = A.init_params(jax.random.PRNGKey(0), CFG)
+    state = {"params": params, "step": jnp.int32(0)}
+
+    @jax.jit
+    def train_step(state, batch):
+        imgs, lbls = batch
+        loss, g = jax.value_and_grad(
+            lambda p: A.loss_fn(p, imgs, lbls, CFG))(state["params"])
+        new_p = jax.tree.map(lambda p, gg: p - 1e-4 * gg, state["params"], g)
+        return {"params": new_p, "step": state["step"] + 1}, {"loss": loss}
+
+    tr = Trainer(train_step, state, iter(ds))
+    tr.run(args.steps)
+    rep = tr.report()
+    print(f"tier={args.tier} threads={args.threads} prefetch={args.prefetch}")
+    print(f"  data-wait fraction: {rep['data_wait_frac']:.1%} "
+          f"(prefetch hides I/O when ~0)")
+    print(f"  losses: {[round(h['loss'], 3) for h in tr.history]}")
+    print("dstat-style read trace (MB/s):")
+    print(tracer.to_csv())
+
+
+if __name__ == "__main__":
+    main()

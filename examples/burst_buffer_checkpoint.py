@@ -1,0 +1,54 @@
+"""Burst-buffer checkpointing demo (paper §V-C, the 2.6x result).
+
+    PYTHONPATH=src python examples/burst_buffer_checkpoint.py
+
+Checkpoints a ~75MB state to (a) direct HDD, (b) direct Optane, (c) Optane
+burst buffer with async HDD drain, printing blocked time per strategy and
+proving the slow tier ends up with every checkpoint.
+"""
+import os, sys, tempfile, time
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import BurstBufferCheckpointer, DirectCheckpointer, make_storage
+from repro.core.checkpoint import CheckpointSaver
+
+
+def main():
+    rng = np.random.default_rng(0)
+    state = {"params": {f"layer{i}": rng.normal(size=(512, 9216)).astype(np.float32)
+                        for i in range(4)}}
+    nbytes = sum(v.nbytes for v in state["params"].values())
+    print(f"checkpoint payload: {nbytes/1e6:.0f} MB")
+    root = tempfile.mkdtemp()
+    ts = 1.0
+
+    hdd = make_storage("hdd", os.path.join(root, "hdd"), time_scale=ts)
+    d = DirectCheckpointer(hdd, "direct_hdd/m")
+    d.save(1, state)
+    print(f"direct-to-HDD blocked:    {d.blocked_s[0]:.2f}s")
+
+    opt = make_storage("optane", os.path.join(root, "opt"), time_scale=ts)
+    d2 = DirectCheckpointer(opt, "direct_opt/m")
+    d2.save(1, state)
+    print(f"direct-to-Optane blocked: {d2.blocked_s[0]:.2f}s")
+
+    fast = make_storage("optane", os.path.join(root, "bb_fast"), time_scale=ts)
+    slow = make_storage("hdd", os.path.join(root, "bb_slow"), time_scale=ts)
+    bb = BurstBufferCheckpointer(fast, slow, "bb/m")
+    t0 = time.monotonic()
+    bb.save(1, state)
+    print(f"burst-buffer blocked:     {bb.blocked_s[0]:.2f}s "
+          f"(training continues while the drain runs)")
+    bb.wait()
+    print(f"async drain finished at t={time.monotonic()-t0:.2f}s")
+    restored = CheckpointSaver(slow, "bb/m").restore_pytree(state)
+    ok = all(np.array_equal(restored["params"][k], state["params"][k])
+             for k in state["params"])
+    print(f"slow-tier copy bit-identical: {ok}")
+    bb.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+from .base import ModelConfig, InputShape, SHAPES, runnable_cells
+
+from . import (
+    seamless_m4t_medium,
+    granite_moe_3b_a800m,
+    mixtral_8x22b,
+    qwen2_vl_7b,
+    phi3_medium_14b,
+    deepseek_coder_33b,
+    gemma3_4b,
+    qwen3_4b,
+    mamba2_2p7b,
+    jamba_1p5_large_398b,
+    alexnet_mini,
+)
+
+ARCHS = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        seamless_m4t_medium,
+        granite_moe_3b_a800m,
+        mixtral_8x22b,
+        qwen2_vl_7b,
+        phi3_medium_14b,
+        deepseek_coder_33b,
+        gemma3_4b,
+        qwen3_4b,
+        mamba2_2p7b,
+        jamba_1p5_large_398b,
+    )
+}
+
+ALEXNET = alexnet_mini.CONFIG
+ALEXNET_SMOKE = alexnet_mini.SMOKE
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; options: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = [
+    "ModelConfig", "InputShape", "SHAPES", "ARCHS", "get_config",
+    "runnable_cells", "ALEXNET", "ALEXNET_SMOKE",
+]

@@ -1,0 +1,20 @@
+"""AlexNet — the paper's mini-application network (§III-B).
+5 conv + 3 maxpool + 3 FC, ReLU; 224x224x3 inputs, 102 classes
+(Caltech-101 + background). ``SMOKE`` is the CPU-sized variant used in
+tests and the quick benchmarks."""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class AlexNetConfig:
+    name: str = "alexnet"
+    in_hw: int = 224
+    channels: int = 3
+    n_classes: int = 102
+    filters: tuple = (64, 192, 384, 256, 256)
+    fc: tuple = (4096, 4096)
+    lr: float = 1e-4
+
+
+CONFIG = AlexNetConfig()
+SMOKE = AlexNetConfig(name="alexnet-smoke", in_hw=64, filters=(16, 32, 48, 32, 32), fc=(256, 256))

@@ -1,0 +1,224 @@
+"""Config system: model configs, input shapes, and the 40-cell matrix."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Tuple
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One architecture.  All sizes are the exact public configs; the only
+    framework-added field is ``padded_vocab`` (vocab rounded up to 256 so the
+    embedding table shards evenly — standard practice, noted in DESIGN.md)."""
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+    # attention variants
+    rope_theta: float = 1e4
+    qk_norm: bool = False
+    window: Optional[int] = None       # sliding-window size (SWA)
+    local_global_period: int = 0       # gemma3: every k-th layer is global
+    mrope: bool = False                # qwen2-vl M-RoPE (3-section rotary)
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    moe_chunk: int = 256
+    moe_period: int = 1                # MoE every k-th layer (jamba: 2), dense MLP otherwise
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    attn_period: int = 0               # jamba: 1 attn per ``attn_period`` layers
+    # enc-dec
+    enc_layers: int = 0
+    # modality stub: inputs are precomputed frame/patch embeddings
+    modality_stub: bool = False
+    modality_seq: int = 0              # stub frontend output length (encoder side)
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    source: str = ""
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        return _round_up(self.vocab_size, 256)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    # -- head padding for clean 16-way TP --------------------------------
+    # Archs with 28/40/56/8 q-heads can't shard heads over a 16-wide model
+    # axis; replicated attention probabilities cost GiBs per device in the
+    # backward pass.  Standard practice: pad head counts to the next clean
+    # multiple (zero-init extra heads).  The *public* n_heads/n_kv_heads
+    # stay authoritative for MODEL_FLOPS; padded_* are the tensor shapes.
+    @property
+    def padded_heads(self) -> int:
+        H, Hkv = self.n_heads, self.n_kv_heads
+        if H == 0:
+            return 0
+        if H % 16 == 0 and H % Hkv == 0:
+            return H
+        Hp = ((H + 15) // 16) * 16
+        while Hp % self.padded_kv_heads != 0:
+            Hp += 16
+        return Hp
+
+    @property
+    def padded_kv_heads(self) -> int:
+        H, Hkv = self.n_heads, self.n_kv_heads
+        if H == 0 or (H % 16 == 0 and H % Hkv == 0):
+            return Hkv
+        Hp = ((H + 15) // 16) * 16
+        # smallest kv-head count >= Hkv that divides the padded q heads
+        for cand in range(Hkv, Hp + 1):
+            if Hp % cand == 0:
+                return cand
+        return Hp
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch run the 500k-token long-context decode shape?
+        True for SSM/hybrid and windowed-attention archs (per assignment)."""
+        return (
+            self.family in ("ssm", "hybrid")
+            or self.window is not None
+            or self.local_global_period > 0
+        )
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all 10 assigned archs decode (enc-dec included)
+
+    def param_count(self) -> int:
+        """Total parameter count N (analytic)."""
+        V, D = self.padded_vocab, self.d_model
+        n = V * D  # embedding
+        if not self.tie_embeddings:
+            n += V * D
+        def attn_params() -> int:
+            H, Hkv, hd = self.n_heads, self.n_kv_heads, self.head_dim
+            return D * H * hd + 2 * D * Hkv * hd + H * hd * D
+        def mlp_params() -> int:
+            return 3 * D * self.d_ff  # SwiGLU: gate, up, down
+        def moe_params() -> int:
+            return D * self.n_experts + self.n_experts * 3 * D * self.d_ff
+
+        def ffn_params_for_layer(i: int) -> int:
+            if self.is_moe and (i % self.moe_period == self.moe_period - 1):
+                return moe_params()
+            return mlp_params()
+        def mamba_params() -> int:
+            din, N, Hs = self.d_inner, self.ssm_state, self.ssm_heads
+            in_p = D * (2 * din + 2 * N + Hs)
+            conv = self.ssm_conv_width * (din + 2 * N)
+            out_p = din * D + din  # out proj + gated norm
+            return in_p + conv + out_p + 3 * Hs
+        if self.family == "ssm":
+            n += self.n_layers * (mamba_params() + 2 * D)
+        elif self.family == "hybrid":
+            n_attn = self.n_layers // self.attn_period
+            n_mamba = self.n_layers - n_attn
+            n += n_attn * (attn_params() + 2 * D)
+            n += n_mamba * (mamba_params() + 2 * D)
+            n += sum(ffn_params_for_layer(i) for i in range(self.n_layers))
+        elif self.family == "encdec":
+            # encoder self-attn+mlp, decoder self+cross+mlp
+            n += self.enc_layers * (attn_params() + mlp_params() + 2 * D)
+            n += self.n_layers * (2 * attn_params() + mlp_params() + 3 * D)
+        else:
+            n += self.n_layers * (attn_params() + 2 * D)
+            n += sum(ffn_params_for_layer(i) for i in range(self.n_layers))
+        return n
+
+    def active_param_count(self) -> int:
+        """N_active: params touched per token (MoE: top-k experts only)."""
+        if not self.is_moe:
+            return self.param_count()
+        D = self.d_model
+        n_moe_layers = sum(
+            1 for i in range(self.n_layers)
+            if i % self.moe_period == self.moe_period - 1
+        )
+        dense_moe = n_moe_layers * self.n_experts * 3 * D * self.d_ff
+        active_moe = n_moe_layers * self.experts_per_token * 3 * D * self.d_ff
+        return self.param_count() - dense_moe + active_moe
+
+    def smoke(self) -> "ModelConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        kw: Dict = dict(
+            n_layers=min(self.n_layers, 2),
+            d_model=64,
+            d_ff=128 if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+        )
+        if self.n_heads:
+            kw.update(n_heads=4, n_kv_heads=2, head_dim=16)
+        if self.is_moe:
+            # capacity_factor = E/k makes the tiny smoke configs drop-free,
+            # so prefill+decode match the teacher-forced forward exactly
+            kw.update(n_experts=4, experts_per_token=2, moe_chunk=16,
+                      capacity_factor=2.0)
+        if self.family in ("ssm", "hybrid"):
+            kw.update(ssm_state=16, ssm_head_dim=16)
+        if self.family == "hybrid":
+            kw.update(n_layers=max(2, 2 * self.attn_period) if self.attn_period else 2,
+                      attn_period=self.attn_period or 2)
+        if self.enc_layers:
+            kw.update(enc_layers=2)
+        if self.local_global_period:
+            kw.update(local_global_period=self.local_global_period,
+                      window=min(self.window or 16, 16))
+        elif self.window is not None:
+            kw.update(window=16)
+        if self.modality_stub:
+            kw.update(modality_seq=min(self.modality_seq or 16, 16))
+        return replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def runnable_cells(cfg: ModelConfig) -> List[str]:
+    """Which of the 4 assigned shapes run for this arch (skip rules per
+    DESIGN.md §4)."""
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        cells.append("long_500k")
+    return cells

@@ -1,0 +1,21 @@
+"""gemma3-4b — dense, 5 local (SWA-1024) layers per 1 global, 128k ctx.
+[hf:google/gemma-3-1b-pt family; unverified] 34L d_model=2560 8H (GQA kv=4)
+d_ff=10240 vocab=262144, head_dim=256."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-4b",
+    family="dense",
+    n_layers=34,
+    d_model=2560,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=10240,
+    vocab_size=262144,
+    window=1024,
+    local_global_period=6,  # layers 5, 11, ... are global; rest local
+    qk_norm=True,
+    rope_theta=1e6,
+    source="hf:google/gemma-3-1b-pt; unverified",
+)

@@ -1,0 +1,26 @@
+"""jamba-1.5-large-398b — hybrid Mamba+attention 1:7 interleave, MoE 16e top-2.
+[arXiv:2403.19887; hf] 72L d_model=8192 64H (GQA kv=8) d_ff=24576
+vocab=65536, MoE 16e top-2. One attention layer per 8-layer period; the
+other 7 use the (Mamba2/SSD) mixer — see DESIGN.md hardware-adaptation notes."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    n_experts=16,
+    experts_per_token=2,
+    moe_period=2,          # MoE every 2nd layer (dense MLP otherwise)
+    attn_period=8,          # 1 attention : 7 mamba
+    ssm_state=128,
+    ssm_head_dim=128,
+    ssm_expand=2,
+    ssm_conv_width=4,
+    source="arXiv:2403.19887; hf",
+)

@@ -1,0 +1,22 @@
+"""qwen2-vl-7b — dense VLM backbone with M-RoPE.
+[arXiv:2409.12191; hf] 28L d_model=3584 28H (GQA kv=4) d_ff=18944
+vocab=152064. Vision frontend is a STUB: positions ids (t/h/w) and patch
+embeddings come precomputed via input_specs()."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="dense",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab_size=152064,
+    mrope=True,
+    rope_theta=1e6,
+    modality_stub=True,
+    modality_seq=0,         # decoder-only: patch embeds merged upstream
+    source="arXiv:2409.12191; hf",
+)

@@ -1,0 +1,21 @@
+"""seamless-m4t-medium — enc-dec multimodal (speech/text) backbone.
+[arXiv:2308.11596; hf] 12L d_model=1024 16H (GQA kv=16) d_ff=4096 vocab=256206.
+The speech frontend is a STUB per the assignment: input_specs() provides
+precomputed frame embeddings (B, T_src, d_model)."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="encdec",
+    n_layers=12,            # decoder layers
+    enc_layers=12,          # encoder layers
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=256206,
+    modality_stub=True,
+    modality_seq=1024,      # stub speech-frame sequence fed to the encoder
+    source="arXiv:2308.11596; hf",
+)

@@ -1,0 +1,27 @@
+"""repro.core — the paper's contribution: DL I/O as a first-class subsystem.
+
+* :mod:`repro.core.dataset` — tf.data-like input pipeline (shuffle / parallel
+  map / batch / prefetch / cache / ignore_errors).
+* :mod:`repro.core.prefetcher` — background-thread prefetcher + device
+  double-buffering.
+* :mod:`repro.core.records` — record container + image payloads + decode.
+* :mod:`repro.core.storage` — storage tiers (native + Table-I-calibrated
+  simulator: hdd / ssd / optane / lustre).
+* :mod:`repro.core.checkpoint` — sharded TF-Saver-like checkpointing.
+* :mod:`repro.core.burst_buffer` — fast-tier staging + async drain (the 2.6x).
+* :mod:`repro.core.microbench` — STREAM-like ingestion benchmark.
+* :mod:`repro.core.stats` — dstat-like I/O tracing.
+"""
+from .dataset import Dataset, image_pipeline
+from .prefetcher import PrefetchIterator, prefetch_to_device
+from .storage import Storage, NativeStorage, SimulatedStorage, TIERS, make_storage
+from .checkpoint import CheckpointSaver
+from .burst_buffer import BurstBufferCheckpointer, DirectCheckpointer
+from .stats import IOTracer, StepTimer
+
+__all__ = [
+    "Dataset", "image_pipeline", "PrefetchIterator", "prefetch_to_device",
+    "Storage", "NativeStorage", "SimulatedStorage", "TIERS", "make_storage",
+    "CheckpointSaver", "BurstBufferCheckpointer", "DirectCheckpointer",
+    "IOTracer", "StepTimer",
+]

@@ -1,0 +1,224 @@
+"""Burst-buffer checkpointing (paper §III-C, Fig. 9/10 — the 2.6x result).
+
+Training writes each checkpoint synchronously to a *fast, small* tier
+(Optane in the paper; any :class:`Storage` here), then immediately resumes
+while a background drainer copies the files to the *slow, large* tier (HDD)
+and finally deletes the staged copy to free buffer capacity.  The commit
+marker on the slow tier is only written after all files of a step have
+landed, so either tier is always restorable to a consistent step.
+
+``DirectCheckpointer`` (same interface, no staging) is the paper's baseline
+of checkpointing straight to a device.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, List, Optional
+
+from .checkpoint import CheckpointSaver, SaveResult, CHECKPOINT_MARKER
+
+
+@dataclass
+class DrainRecord:
+    step: int
+    n_bytes: int
+    staged_s: float     # time training was blocked (fast-tier write)
+    drain_s: float      # background copy time (overlapped)
+    completed_at: float
+
+
+class DirectCheckpointer:
+    """Baseline: checkpoint synchronously to one storage tier."""
+
+    def __init__(self, storage, prefix: str = "ckpt/model", *, keep: int = 5,
+                 n_shards: int = 1, sync: bool = True, quantize=None):
+        self.saver = CheckpointSaver(
+            storage, prefix, keep=keep, n_shards=n_shards, sync=sync,
+            quantize=quantize,
+        )
+        self.blocked_s: List[float] = []
+
+    def save(self, step: int, tree: Any, extra_meta: Optional[dict] = None) -> SaveResult:
+        r = self.saver.save(step, tree, extra_meta)
+        self.blocked_s.append(r.seconds)
+        return r
+
+    def restore_pytree(self, skeleton: Any, step: Optional[int] = None) -> Any:
+        return self.saver.restore_pytree(skeleton, step)
+
+    def restore_sharded(self, skeleton, shardings, step=None):
+        return self.saver.restore_sharded(skeleton, shardings, step)
+
+    def latest_step(self) -> Optional[int]:
+        return self.saver.latest_step()
+
+    def wait(self) -> None:  # interface parity
+        return
+
+    def close(self) -> None:
+        return
+
+
+class BurstBufferCheckpointer:
+    """Stage to ``fast_storage``, drain asynchronously to ``slow_storage``."""
+
+    def __init__(
+        self,
+        fast_storage,
+        slow_storage,
+        prefix: str = "ckpt/model",
+        *,
+        keep: int = 5,
+        n_shards: int = 1,
+        sync: bool = True,
+        quantize=None,
+        cleanup_fast: bool = True,
+        drain_async: bool = True,
+    ):
+        self.fast = fast_storage
+        self.slow = slow_storage
+        self.prefix = prefix
+        self.keep = keep
+        self.cleanup_fast = cleanup_fast
+        self.drain_async = drain_async
+        self.fast_saver = CheckpointSaver(
+            fast_storage, prefix, keep=keep, n_shards=n_shards, sync=sync,
+            quantize=quantize,
+        )
+        d = prefix.rsplit("/", 1)[0] if "/" in prefix else "."
+        self._dir = d
+        slow_storage.makedirs(d)
+        self.blocked_s: List[float] = []
+        self.drains: List[DrainRecord] = []
+        self._q: "queue.Queue" = queue.Queue()
+        self._pending: List[int] = []      # steps staged but not yet drained
+        self._drained: set = set()
+        self._pending_lock = threading.Lock()
+        self._errors: List[BaseException] = []
+        self._thread: Optional[threading.Thread] = None
+        if drain_async:
+            self._thread = threading.Thread(target=self._drain_loop, daemon=True)
+            self._thread.start()
+
+    # -- producer (training thread) --------------------------------------------
+    def save(self, step: int, tree: Any, extra_meta: Optional[dict] = None) -> SaveResult:
+        r = self.fast_saver.save(step, tree, extra_meta)
+        self.blocked_s.append(r.seconds)  # only the fast-tier write blocks
+        with self._pending_lock:
+            self._pending.append(step)
+        job = (step, list(r.files), r.n_bytes, time.monotonic(), r.seconds)
+        if self.drain_async:
+            self._q.put(job)
+        else:
+            self._drain_one(job)
+        return r
+
+    # -- drainer -----------------------------------------------------------------
+    def _drain_loop(self) -> None:
+        while True:
+            job = self._q.get()
+            if job is None:
+                self._q.task_done()
+                return
+            try:
+                self._drain_one(job)
+            except BaseException as e:  # surface on wait()
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def _drain_one(self, job) -> None:
+        step, files, n_bytes, t_start, staged_s = job
+        t0 = time.monotonic()
+        for path in files:
+            # read from fast tier (fast read cost), write to slow tier
+            # (slow write cost) — no sync needed: data is already durable
+            # on the fast tier (paper §V-C).
+            self.fast.copy_to(path, self.slow, path)
+        # slow-tier commit marker after all files landed
+        steps = self._slow_steps()
+        if step not in steps:
+            steps.append(step)
+        steps.sort()
+        retained = steps[-self.keep:]
+        import json
+
+        marker = json.dumps(dict(latest=step, all_steps=retained)).encode()
+        self.slow.write_file(f"{self._dir}/{CHECKPOINT_MARKER}", marker)
+        for old in steps[:-self.keep] if len(steps) > self.keep else []:
+            self._delete_slow_step(old)
+        if self.cleanup_fast:
+            # free buffer capacity (keep only the newest staged step around
+            # for fast restore) — paper §V-C: "cleanup the buffer".  Never
+            # evict steps still waiting in the drain queue.
+            with self._pending_lock:
+                self._drained.add(step)
+                pending = set(self._pending) - self._drained
+            fast_steps = self.fast_saver.all_steps()
+            keep_newest = max(fast_steps) if fast_steps else None
+            for old in fast_steps:
+                if old != keep_newest and old not in pending:
+                    self.fast_saver._delete_step(old)
+        self.drains.append(
+            DrainRecord(step, n_bytes, staged_s, time.monotonic() - t0,
+                        time.monotonic())
+        )
+
+    def _slow_steps(self) -> List[int]:
+        import json
+
+        p = f"{self._dir}/{CHECKPOINT_MARKER}"
+        if not self.slow.exists(p):
+            return []
+        return list(json.loads(self.slow.read_file(p)).get("all_steps", []))
+
+    def _delete_slow_step(self, step: int) -> None:
+        base = f"{self.prefix}-{step}".rsplit("/", 1)[-1]
+        for name in self.slow.listdir(self._dir):
+            if name.startswith(base + "."):
+                self.slow.remove(f"{self._dir}/{name}")
+
+    # -- consumer-side API ---------------------------------------------------------
+    def wait(self) -> None:
+        """Block until all queued drains have completed."""
+        self._q.join()
+        if self._errors:
+            raise self._errors[0]
+
+    def close(self) -> None:
+        if self._thread is not None:
+            self._q.put(None)
+            self._thread.join(timeout=60)
+            self._thread = None
+
+    def latest_step(self) -> Optional[int]:
+        s = self.fast_saver.latest_step()
+        if s is not None:
+            return s
+        return self._slow_latest()
+
+    def _slow_latest(self) -> Optional[int]:
+        import json
+
+        p = f"{self._dir}/{CHECKPOINT_MARKER}"
+        if not self.slow.exists(p):
+            return None
+        return json.loads(self.slow.read_file(p))["latest"]
+
+    def restore_pytree(self, skeleton: Any, step: Optional[int] = None) -> Any:
+        """Restore preferring the fast tier (paper: buffer holds the newest)."""
+        try:
+            return self.fast_saver.restore_pytree(skeleton, step)
+        except (FileNotFoundError, KeyError, OSError):
+            slow_saver = CheckpointSaver(self.slow, self.prefix, keep=self.keep)
+            return slow_saver.restore_pytree(skeleton, step)
+
+    def restore_sharded(self, skeleton, shardings, step=None):
+        try:
+            return self.fast_saver.restore_sharded(skeleton, shardings, step)
+        except (FileNotFoundError, KeyError, OSError):
+            slow_saver = CheckpointSaver(self.slow, self.prefix, keep=self.keep)
+            return slow_saver.restore_sharded(skeleton, shardings, step)

@@ -1,0 +1,300 @@
+"""Sharded checkpoint save/restore (paper §II-B: tf.train.Saver analogue).
+
+Layout mirrors TF's Saver, generalized to N data shards (one per writer
+host on a pod):
+
+    <prefix>-<step>.meta                   # JSON: step, treedef, user config
+    <prefix>-<step>.index                  # JSON: tensor -> (shard, offset, ...)
+    <prefix>-<step>.data-00000-of-00004    # raw tensor bytes
+    <prefix>-<step>.data-00001-of-00004
+    ...
+    checkpoint                             # commit marker: latest + retained steps
+
+Guarantees:
+
+* **Atomic commit** — data/index/meta are fully written (and optionally
+  fsync'd, paper §III-C) *before* the ``checkpoint`` marker is rewritten;
+  a crash mid-save leaves the previous checkpoint restorable.
+* **Retention** — keep the newest ``keep`` checkpoints (TF default 5).
+* **Elastic restore** — the index is topology-free; restore can re-shard
+  onto any mesh via ``jax.make_array_from_callback``.
+* **int8 option** — blockwise-quantized storage (2x–4x smaller bursts), with
+  scales stored alongside; see also ``repro.kernels.quantize`` for the TPU
+  kernel version of the same transform.
+"""
+from __future__ import annotations
+
+import io
+import json
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+CHECKPOINT_MARKER = "checkpoint"
+_QBLOCK = 256  # quantization block (last-dim) size
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> flat dict of numpy arrays
+# ---------------------------------------------------------------------------
+def flatten_pytree(tree: Any) -> Tuple[Dict[str, np.ndarray], Any]:
+    import jax
+
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    treedef = jax.tree_util.tree_structure(tree)
+    flat = {}
+    for path, leaf in leaves_with_paths:
+        key = "/".join(_path_str(p) for p in path) or "leaf"
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat, treedef
+
+
+def _path_str(p) -> str:
+    import jax
+
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    return str(p)
+
+
+def unflatten_pytree(flat: Dict[str, np.ndarray], treedef) -> Any:
+    import jax
+
+    # Re-flatten a skeleton to get key order, then rebuild.
+    skeleton = jax.tree_util.tree_unflatten(treedef, list(range(treedef.num_leaves)))
+    paths = jax.tree_util.tree_flatten_with_path(skeleton)[0]
+    ordered = []
+    for path, _ in paths:
+        key = "/".join(_path_str(p) for p in path) or "leaf"
+        ordered.append(flat[key])
+    return jax.tree_util.tree_unflatten(treedef, ordered)
+
+
+# ---------------------------------------------------------------------------
+# int8 blockwise quantization (numpy mirror of kernels/quantize.py)
+# ---------------------------------------------------------------------------
+def quantize_blockwise(arr: np.ndarray, block: int = _QBLOCK):
+    flat = arr.astype(np.float32).reshape(-1)
+    pad = (-len(flat)) % block
+    if pad:
+        flat = np.concatenate([flat, np.zeros(pad, np.float32)])
+    blocks = flat.reshape(-1, block)
+    scale = np.abs(blocks).max(axis=1, keepdims=True) / 127.0
+    scale = np.where(scale == 0, 1.0, scale)
+    q = np.clip(np.round(blocks / scale), -127, 127).astype(np.int8)
+    return q, scale.astype(np.float32), pad
+
+
+def dequantize_blockwise(q: np.ndarray, scale: np.ndarray, pad: int,
+                         shape, dtype) -> np.ndarray:
+    flat = (q.astype(np.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Saver
+# ---------------------------------------------------------------------------
+@dataclass
+class SaveResult:
+    step: int
+    n_bytes: int
+    seconds: float
+    files: List[str]
+
+
+class CheckpointSaver:
+    """TF-Saver-like sharded checkpointer over a :class:`Storage`."""
+
+    def __init__(
+        self,
+        storage,
+        prefix: str = "ckpt/model",
+        *,
+        keep: int = 5,
+        n_shards: int = 1,
+        sync: bool = True,
+        quantize: Optional[str] = None,  # None | "int8"
+    ):
+        self.storage = storage
+        self.prefix = prefix
+        self.keep = keep
+        self.n_shards = max(1, n_shards)
+        self.sync = sync
+        self.quantize = quantize
+        d = prefix.rsplit("/", 1)[0] if "/" in prefix else "."
+        self._dir = d
+        storage.makedirs(d)
+
+    # -- naming ----------------------------------------------------------------
+    def _base(self, step: int) -> str:
+        return f"{self.prefix}-{step}"
+
+    def _marker_path(self) -> str:
+        return f"{self._dir}/{CHECKPOINT_MARKER}"
+
+    # -- save --------------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra_meta: Optional[dict] = None) -> SaveResult:
+        t0 = time.monotonic()
+        flat, treedef = flatten_pytree(tree)
+        base = self._base(step)
+
+        # Assign tensors to shards round-robin by size (largest first) so the
+        # N writer hosts carry balanced bytes.
+        names = sorted(flat, key=lambda k: -flat[k].nbytes)
+        shard_of: Dict[str, int] = {}
+        shard_bytes = [0] * self.n_shards
+        for name in names:
+            s = int(np.argmin(shard_bytes))
+            shard_of[name] = s
+            shard_bytes[s] += flat[name].nbytes
+
+        buffers = [io.BytesIO() for _ in range(self.n_shards)]
+        index: Dict[str, dict] = {}
+        for name in flat:
+            arr = flat[name]
+            s = shard_of[name]
+            buf = buffers[s]
+            entry: Dict[str, Any] = dict(
+                shard=s,
+                offset=buf.tell(),
+                shape=list(arr.shape),
+                dtype=str(arr.dtype),
+            )
+            if self.quantize == "int8" and arr.dtype in (
+                np.dtype("float32"), np.dtype("float64"), np.dtype("bfloat16")
+            ) and arr.size >= _QBLOCK:
+                q, scale, pad = quantize_blockwise(arr)
+                buf.write(q.tobytes())
+                entry.update(
+                    quant="int8", qpad=pad, qblock=_QBLOCK,
+                    scale_offset=buf.tell(), scale_len=scale.nbytes,
+                )
+                buf.write(scale.tobytes())
+                entry["length"] = buf.tell() - entry["offset"]
+            else:
+                data = arr.tobytes()
+                buf.write(data)
+                entry["length"] = len(data)
+            index[name] = entry
+
+        files: List[str] = []
+        total = 0
+        # 1) data shards
+        for s, buf in enumerate(buffers):
+            path = f"{base}.data-{s:05d}-of-{self.n_shards:05d}"
+            data = buf.getvalue()
+            self.storage.write_file(path, data, sync=self.sync)
+            files.append(path)
+            total += len(data)
+        # 2) index
+        index_blob = json.dumps(dict(tensors=index, n_shards=self.n_shards)).encode()
+        self.storage.write_file(f"{base}.index", index_blob, sync=self.sync)
+        files.append(f"{base}.index")
+        total += len(index_blob)
+        # 3) meta (graph-structure analogue: the treedef + user config)
+        meta = dict(
+            step=step,
+            treedef=str(treedef),
+            created=time.time(),
+            quantize=self.quantize,
+            extra=extra_meta or {},
+        )
+        meta_blob = json.dumps(meta).encode()
+        self.storage.write_file(f"{base}.meta", meta_blob, sync=self.sync)
+        files.append(f"{base}.meta")
+        total += len(meta_blob)
+        if self.sync:
+            self.storage.fsync_dir(self._dir)  # paper: syncfs() after Saver
+
+        # 4) commit marker LAST (atomicity), then retention.
+        steps = self.all_steps()
+        if step not in steps:
+            steps.append(step)
+        steps.sort()
+        retained = steps[-self.keep:]
+        marker = json.dumps(dict(latest=step, all_steps=retained)).encode()
+        self.storage.write_file(self._marker_path(), marker, sync=self.sync)
+        for old in steps[:-self.keep] if len(steps) > self.keep else []:
+            self._delete_step(old)
+
+        return SaveResult(step, total, time.monotonic() - t0, files)
+
+    def _delete_step(self, step: int) -> None:
+        base_name = self._base(step).rsplit("/", 1)[-1]
+        for name in self.storage.listdir(self._dir):
+            if name.startswith(base_name + "."):
+                self.storage.remove(f"{self._dir}/{name}")
+
+    # -- introspection -----------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        if not self.storage.exists(self._marker_path()):
+            return []
+        marker = json.loads(self.storage.read_file(self._marker_path()))
+        return list(marker.get("all_steps", []))
+
+    def latest_step(self) -> Optional[int]:
+        if not self.storage.exists(self._marker_path()):
+            return None
+        return json.loads(self.storage.read_file(self._marker_path()))["latest"]
+
+    # -- restore -------------------------------------------------------------------
+    def restore(self, step: Optional[int] = None, treedef=None) -> Tuple[Dict[str, np.ndarray], dict]:
+        """Return (flat dict of numpy arrays, meta). Use ``treedef`` (or
+        ``restore_pytree``) to rebuild the original structure."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint under {self.prefix}")
+        base = self._base(step)
+        meta = json.loads(self.storage.read_file(f"{base}.meta"))
+        index = json.loads(self.storage.read_file(f"{base}.index"))
+        shards: Dict[int, bytes] = {}
+        for s in range(index["n_shards"]):
+            path = f"{base}.data-{s:05d}-of-{index['n_shards']:05d}"
+            shards[s] = self.storage.read_file(path)
+        flat: Dict[str, np.ndarray] = {}
+        for name, e in index["tensors"].items():
+            raw = shards[e["shard"]][e["offset"] : e["offset"] + e["length"]]
+            shape, dtype = tuple(e["shape"]), np.dtype(e["dtype"])
+            if e.get("quant") == "int8":
+                qlen = e["scale_offset"] - e["offset"]
+                q = np.frombuffer(raw[:qlen], dtype=np.int8).reshape(-1, e["qblock"])
+                scale = np.frombuffer(
+                    raw[qlen : qlen + e["scale_len"]], dtype=np.float32
+                ).reshape(-1, 1)
+                flat[name] = dequantize_blockwise(q, scale, e["qpad"], shape, dtype)
+            else:
+                flat[name] = np.frombuffer(raw, dtype=dtype).reshape(shape).copy()
+        return flat, meta
+
+    def restore_pytree(self, skeleton: Any, step: Optional[int] = None) -> Any:
+        """Restore into the structure of ``skeleton`` (a pytree of anything)."""
+        import jax
+
+        flat, _meta = self.restore(step)
+        treedef = jax.tree_util.tree_structure(skeleton)
+        return unflatten_pytree(flat, treedef)
+
+    def restore_sharded(self, skeleton: Any, shardings: Any,
+                        step: Optional[int] = None) -> Any:
+        """Elastic restore: place each tensor on the mesh given by
+        ``shardings`` (pytree of NamedSharding matching ``skeleton``),
+        regardless of the topology that wrote the checkpoint."""
+        import jax
+
+        restored = self.restore_pytree(skeleton, step)
+
+        def _place(arr, sharding):
+            return jax.make_array_from_callback(
+                arr.shape, sharding, lambda idx: arr[idx]
+            )
+
+        return jax.tree.map(_place, restored, shardings)

@@ -1,0 +1,291 @@
+"""A tf.data-like input pipeline (paper §II-A / Fig. 2), in pure Python.
+
+The pipeline is a chain of lazily-evaluated nodes::
+
+    Dataset.from_tensor_slices(paths)
+        .shuffle(buffer_size, seed)
+        .map(read_and_decode, num_parallel_calls=8)   # thread-pool I/O
+        .ignore_errors()
+        .batch(64)
+        .prefetch(1)                                   # background thread
+
+Semantics follow the paper's description of the TF Dataset API:
+
+* ``map(num_parallel_calls=k)`` keeps ``k`` elements in flight on a thread
+  pool.  ``deterministic=True`` (default) yields results in input order —
+  like TF — by maintaining a window of futures; ``False`` yields in
+  completion order (lower latency jitter, used for straggler mitigation).
+* ``shuffle`` is TF's streaming buffer shuffle: fill a ``buffer_size``
+  reservoir, emit a uniformly random element, refill.
+* ``batch`` stacks ``n`` consecutive elements (pytree-aware).
+* ``prefetch`` inserts the background-thread prefetcher (see prefetcher.py).
+* ``cache`` memoizes the upstream stream in host memory after epoch 1
+  (paper §IV-B: "after the first epoch all samples ... cached in memory").
+* ``ignore_errors`` drops elements whose map fn raised (tf.contrib.data.
+  ignore_errors), so corrupt records don't kill a large run.
+"""
+from __future__ import annotations
+
+import random
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Iterable, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from .prefetcher import PrefetchIterator
+
+
+class _ErrorMarker:
+    """Carries an element-level failure downstream (TF semantics: the error
+    surfaces at the iterator unless ``ignore_errors()`` drops it)."""
+
+    __slots__ = ("exc",)
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+def _raising(it: Iterator) -> Iterator:
+    for item in it:
+        if isinstance(item, _ErrorMarker):
+            raise item.exc
+        yield item
+
+
+class Dataset:
+    """Lazily-evaluated pipeline node; iterate to pull elements through."""
+
+    def __init__(self, gen_fn: Callable[[], Iterator]):
+        self._gen_fn = gen_fn
+
+    # -- sources ---------------------------------------------------------------
+    @staticmethod
+    def from_tensor_slices(items: Sequence) -> "Dataset":
+        items = list(items)
+        return Dataset(lambda: iter(items))
+
+    @staticmethod
+    def list_files(storage, dirpath: str = ".", suffix: str = ".rrf") -> "Dataset":
+        names = [n for n in storage.listdir(dirpath) if n.endswith(suffix)]
+        if dirpath not in (".", ""):
+            names = [f"{dirpath}/{n}" for n in names]
+        return Dataset.from_tensor_slices(names)
+
+    @staticmethod
+    def range(n: int) -> "Dataset":
+        return Dataset(lambda: iter(range(n)))
+
+    # -- transformations -------------------------------------------------------
+    def shuffle(self, buffer_size: int, seed: Optional[int] = None) -> "Dataset":
+        upstream = self._gen_fn
+
+        def gen():
+            rng = random.Random(seed)
+            buf: List[Any] = []
+            for item in upstream():
+                buf.append(item)
+                if len(buf) >= buffer_size:
+                    idx = rng.randrange(len(buf))
+                    buf[idx], buf[-1] = buf[-1], buf[idx]
+                    yield buf.pop()
+            while buf:
+                idx = rng.randrange(len(buf))
+                buf[idx], buf[-1] = buf[-1], buf[idx]
+                yield buf.pop()
+
+        return Dataset(gen)
+
+    def map(
+        self,
+        fn: Callable[[Any], Any],
+        num_parallel_calls: int = 1,
+        deterministic: bool = True,
+    ) -> "Dataset":
+        upstream = self._gen_fn
+
+        def safe_fn(item):
+            try:
+                return fn(item)
+            except Exception as e:  # surfaced at the iterator (TF semantics)
+                return _ErrorMarker(e)
+
+        if num_parallel_calls <= 1:
+            def gen_serial():
+                for item in upstream():
+                    yield safe_fn(item)
+            return Dataset(gen_serial)
+
+        def gen_parallel():
+            with ThreadPoolExecutor(max_workers=num_parallel_calls) as pool:
+                src = upstream()
+                window: List = []
+                # prime the window
+                for item in src:
+                    window.append(pool.submit(safe_fn, item))
+                    if len(window) >= num_parallel_calls:
+                        break
+                for item in src:
+                    if deterministic:
+                        fut = window.pop(0)
+                    else:
+                        # completion order: find first done, else oldest
+                        done_i = next(
+                            (i for i, f in enumerate(window) if f.done()), 0
+                        )
+                        fut = window.pop(done_i)
+                    window.append(pool.submit(safe_fn, item))
+                    yield fut.result()
+                while window:
+                    if deterministic:
+                        fut = window.pop(0)
+                    else:
+                        done_i = next(
+                            (i for i, f in enumerate(window) if f.done()), 0
+                        )
+                        fut = window.pop(done_i)
+                    yield fut.result()
+
+        return Dataset(gen_parallel)
+
+    def ignore_errors(self) -> "Dataset":
+        upstream = self._gen_fn
+
+        def gen():
+            for item in upstream():
+                if isinstance(item, _ErrorMarker):
+                    continue
+                yield item
+
+        return Dataset(gen)
+
+    def batch(self, batch_size: int, drop_remainder: bool = True) -> "Dataset":
+        upstream = self._gen_fn
+
+        def _stack(elems: List[Any]):
+            first = elems[0]
+            if isinstance(first, tuple):
+                return tuple(
+                    _stack([e[i] for e in elems]) for i in range(len(first))
+                )
+            if isinstance(first, dict):
+                return {k: _stack([e[k] for e in elems]) for k in first}
+            return np.stack([np.asarray(e) for e in elems])
+
+        def gen():
+            buf: List[Any] = []
+            for item in _raising(upstream()):
+                buf.append(item)
+                if len(buf) == batch_size:
+                    yield _stack(buf)
+                    buf = []
+            if buf and not drop_remainder:
+                yield _stack(buf)
+
+        return Dataset(gen)
+
+    def repeat(self, count: Optional[int] = None) -> "Dataset":
+        upstream = self._gen_fn
+
+        def gen():
+            i = 0
+            while count is None or i < count:
+                yield from upstream()
+                i += 1
+
+        return Dataset(gen)
+
+    def take(self, n: int) -> "Dataset":
+        upstream = self._gen_fn
+
+        def gen():
+            it = upstream()
+            for _ in range(n):
+                try:
+                    yield next(it)
+                except StopIteration:
+                    return
+
+        return Dataset(gen)
+
+    def cache(self) -> "Dataset":
+        upstream = self._gen_fn
+        memo: dict = {"items": None, "lock": threading.Lock()}
+
+        def gen():
+            with memo["lock"]:
+                cached = memo["items"]
+            if cached is not None:
+                yield from cached
+                return
+            items = []
+            for item in upstream():
+                items.append(item)
+                yield item
+            with memo["lock"]:
+                memo["items"] = items
+
+        return Dataset(gen)
+
+    def prefetch(self, buffer_size: int = 1) -> "Dataset":
+        if buffer_size <= 0:
+            return self
+        upstream = self._gen_fn
+        return Dataset(lambda: PrefetchIterator(upstream(), buffer_size))
+
+    # -- sinks -------------------------------------------------------------------
+    def __iter__(self) -> Iterator:
+        return _raising(iter(self._gen_fn()))
+
+    def as_numpy(self) -> List[Any]:
+        return list(self)
+
+
+def image_pipeline(
+    storage,
+    paths: Sequence[str],
+    labels: Optional[Sequence[int]] = None,
+    *,
+    batch_size: int = 64,
+    num_parallel_calls: int = 4,
+    prefetch: int = 1,
+    shuffle_buffer: int = 1024,
+    out_hw: tuple = (224, 224),
+    seed: int = 0,
+    preprocess: bool = True,
+    repeat: bool = False,
+) -> Dataset:
+    """The paper's full input pipeline (Fig. 2) over an image-file corpus."""
+    from . import records
+
+    if labels is not None:
+        src = Dataset.from_tensor_slices(list(zip(paths, labels)))
+
+        def load(item):
+            path, label = item
+            blob = storage.read_file(path)                      # tf.read_file
+            payload = records.decode_single_record(blob)
+            if preprocess:
+                img = records.preprocess_image(payload, *out_hw)  # decode+resize
+            else:
+                img = np.frombuffer(payload, dtype=np.uint8)      # read-only mode
+            return img, np.int32(label)
+    else:
+        src = Dataset.from_tensor_slices(list(paths))
+
+        def load(path):
+            blob = storage.read_file(path)
+            payload = records.decode_single_record(blob)
+            if preprocess:
+                return records.preprocess_image(payload, *out_hw)
+            return np.frombuffer(payload, dtype=np.uint8)
+
+    ds = src.shuffle(shuffle_buffer, seed=seed)
+    if repeat:
+        ds = ds.repeat()
+    ds = ds.map(load, num_parallel_calls=num_parallel_calls)
+    ds = ds.ignore_errors()
+    ds = ds.batch(batch_size, drop_remainder=True)
+    if prefetch:
+        ds = ds.prefetch(prefetch)
+    return ds

@@ -1,0 +1,117 @@
+"""STREAM-like TensorFlow-I/O micro-benchmark (paper §III-A, Fig. 4/5).
+
+Measures raw ingestion bandwidth of the input pipeline: read files from a
+storage tier, optionally decode+resize, batch, and pull batches through the
+iterator as fast as possible (no compute phase).  Reports images/s and MB/s
+as the paper does, under a strong-scaling sweep of reader threads.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from . import records
+from .dataset import Dataset
+
+
+@dataclass
+class MicrobenchResult:
+    storage: str
+    threads: int
+    preprocess: bool
+    n_images: int
+    total_bytes: int
+    seconds: float
+
+    @property
+    def images_per_s(self) -> float:
+        return self.n_images / self.seconds
+
+    @property
+    def mb_per_s(self) -> float:
+        return self.total_bytes / 1e6 / self.seconds
+
+    def row(self) -> str:
+        return (
+            f"{self.storage},{self.threads},{int(self.preprocess)},"
+            f"{self.n_images},{self.images_per_s:.2f},{self.mb_per_s:.2f}"
+        )
+
+
+def run_microbench(
+    storage,
+    paths: Sequence[str],
+    *,
+    threads: int = 1,
+    batch_size: int = 64,
+    preprocess: bool = True,
+    out_hw: tuple = (64, 64),
+    seed: int = 0,
+    n_batches: Optional[int] = None,
+) -> MicrobenchResult:
+    """One micro-benchmark run: consume the corpus through the pipeline."""
+    sizes = {}
+
+    def load(path):
+        blob = storage.read_file(path)  # tf.read_file()
+        sizes[path] = len(blob)
+        if not preprocess:
+            return np.int64(len(blob))  # read-only pipeline (paper Fig. 5)
+        payload = records.decode_single_record(blob)
+        return records.preprocess_image(payload, *out_hw)
+
+    ds = (
+        Dataset.from_tensor_slices(list(paths))
+        .shuffle(len(paths), seed=seed)
+        .map(load, num_parallel_calls=threads)
+        .ignore_errors()
+        .batch(batch_size, drop_remainder=True)
+    )
+
+    n_images = 0
+    t0 = time.monotonic()
+    it = iter(ds)
+    consumed_batches = 0
+    for batch in it:
+        first = batch[0] if isinstance(batch, tuple) else batch
+        n_images += len(first)
+        consumed_batches += 1
+        if n_batches is not None and consumed_batches >= n_batches:
+            break
+    seconds = time.monotonic() - t0
+
+    return MicrobenchResult(
+        storage=getattr(storage, "name", "?"),
+        threads=threads,
+        preprocess=preprocess,
+        n_images=n_images,
+        total_bytes=sum(sizes.values()),
+        seconds=seconds,
+    )
+
+
+def thread_scaling_sweep(
+    storage,
+    paths: Sequence[str],
+    *,
+    thread_counts: Sequence[int] = (1, 2, 4, 8),
+    repeats: int = 3,
+    warmup: bool = True,
+    **kw,
+) -> List[MicrobenchResult]:
+    """Paper's strong-scaling protocol: warm-up run discarded, median kept."""
+    out: List[MicrobenchResult] = []
+    for t in thread_counts:
+        runs = []
+        n = repeats + (1 if warmup else 0)
+        for i in range(n):
+            r = run_microbench(storage, paths, threads=t, **kw)
+            if warmup and i == 0:
+                continue
+            runs.append(r)
+        runs.sort(key=lambda r: r.seconds)
+        out.append(runs[len(runs) // 2])
+    return out

@@ -1,0 +1,120 @@
+"""Prefetching — the paper's key input-pipeline mechanism (§II-A.2).
+
+The paper documents TensorFlow's prefetcher as: a background thread holding a
+double-ended queue buffer, waiting on a condition variable; the consumer pops
+elements and notifies the thread, which wakes up and fetches more from the
+upstream operation.  :class:`PrefetchIterator` is precisely that structure.
+
+:func:`prefetch_to_device` extends the idea across the PCIe/host boundary
+(which TF 1.10 did not): batches are moved onto the accelerator (with an
+optional sharding) ``size`` steps ahead, so host->HBM transfer also overlaps
+with the device step.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Any, Iterable, Iterator, Optional
+
+
+class _Sentinel:
+    pass
+
+
+_END = _Sentinel()
+
+
+class PrefetchIterator:
+    """Background-thread prefetcher: deque + condition variable (TF design)."""
+
+    def __init__(self, upstream: Iterable, buffer_size: int = 1):
+        if buffer_size < 1:
+            raise ValueError("buffer_size must be >= 1")
+        self._upstream = iter(upstream)
+        self._buffer_size = buffer_size
+        self._buffer: deque = deque()
+        self._cond = threading.Condition()
+        self._done = False          # producer finished (or errored)
+        self._error: Optional[BaseException] = None
+        self._closed = False
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    # -- producer ------------------------------------------------------------
+    def _run(self) -> None:
+        try:
+            for item in self._upstream:
+                with self._cond:
+                    while len(self._buffer) >= self._buffer_size and not self._closed:
+                        self._cond.wait()
+                    if self._closed:
+                        return
+                    self._buffer.append(item)
+                    self._cond.notify_all()
+        except BaseException as e:  # propagate to consumer
+            with self._cond:
+                self._error = e
+        finally:
+            with self._cond:
+                self._done = True
+                self._cond.notify_all()
+
+    # -- consumer --------------------------------------------------------------
+    def __iter__(self) -> "PrefetchIterator":
+        return self
+
+    def __next__(self) -> Any:
+        with self._cond:
+            while not self._buffer and not self._done:
+                self._cond.wait()
+            if self._buffer:
+                item = self._buffer.popleft()
+                self._cond.notify_all()
+                return item
+            if self._error is not None:
+                err, self._error = self._error, None
+                raise err
+            raise StopIteration
+
+    def close(self) -> None:
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+
+    def __del__(self):  # pragma: no cover - best effort
+        try:
+            self.close()
+        except Exception:
+            pass
+
+
+def prefetch_to_device(iterator: Iterable, size: int = 2, sharding=None) -> Iterator:
+    """Move batches onto device ``size`` steps ahead of consumption.
+
+    Each element may be an array or a pytree of arrays.  With a
+    ``jax.sharding.Sharding`` the put is a sharded device_put (multi-chip);
+    otherwise a plain device_put.  Transfers are issued asynchronously by
+    JAX, so keeping a queue of in-flight puts overlaps H2D with compute.
+    """
+    import jax
+
+    queue: deque = deque()
+
+    def _put(batch):
+        if sharding is not None:
+            return jax.tree.map(lambda x: jax.device_put(x, sharding), batch)
+        return jax.tree.map(jax.device_put, batch)
+
+    it = iter(iterator)
+    try:
+        for _ in range(size):
+            queue.append(_put(next(it)))
+    except StopIteration:
+        pass
+    while queue:
+        out = queue.popleft()
+        try:
+            queue.append(_put(next(it)))
+        except StopIteration:
+            pass
+        yield out

@@ -1,0 +1,211 @@
+"""Record container + image payload format ("the files" of the paper).
+
+The paper's workloads read one JPEG per file and decode+resize it inside the
+mapped function.  We have no JPEG codec in this environment, so we define:
+
+* ``RRF1`` — a TFRecord-like container: for each record
+  ``[u64 length][u32 crc32(length)][payload][u32 crc32(payload)]``.
+  Corrupt records raise :class:`RecordError` (exercised by
+  ``Dataset.ignore_errors()``, paper §III-A).
+* ``IMG1`` — an image payload: 16-byte header
+  ``magic(4s) | h(u32) | w(u32) | c(u16) | dtype(u16)`` followed by raw
+  ``h*w*c`` samples.  ``decode_image`` is the ``tf.image.decode_jpeg``
+  analogue: it parses, validates and materializes the array — a real
+  CPU-side decode step with a real cost, which is what the paper measures.
+
+Preprocessing mirrors the paper's mapped function: decode → convert dtype to
+float in [0,1] → resize to the network's input size (224x224x3 for AlexNet).
+"""
+from __future__ import annotations
+
+import struct
+import zlib
+from typing import Iterator, List, Sequence, Tuple
+
+import numpy as np
+
+RECORD_HDR = struct.Struct("<QI")   # length, crc(length)
+RECORD_FTR = struct.Struct("<I")    # crc(payload)
+IMG_HDR = struct.Struct("<4sIIHH")  # magic, h, w, c, dtype-code
+IMG_MAGIC = b"IMG1"
+
+_DTYPES = {0: np.uint8, 1: np.uint16, 2: np.float32}
+_DTYPE_CODES = {np.dtype(v): k for k, v in _DTYPES.items()}
+
+
+class RecordError(ValueError):
+    """Raised on CRC mismatch / truncated record / bad image header."""
+
+
+# ---------------------------------------------------------------------------
+# RRF1 container
+# ---------------------------------------------------------------------------
+def encode_record(payload: bytes) -> bytes:
+    hdr = RECORD_HDR.pack(len(payload), zlib.crc32(struct.pack("<Q", len(payload))))
+    ftr = RECORD_FTR.pack(zlib.crc32(payload))
+    return hdr + payload + ftr
+
+
+def decode_records(blob: bytes) -> Iterator[bytes]:
+    """Yield payloads from a byte-string of concatenated RRF1 records."""
+    off, n = 0, len(blob)
+    while off < n:
+        if off + RECORD_HDR.size > n:
+            raise RecordError("truncated record header")
+        length, hcrc = RECORD_HDR.unpack_from(blob, off)
+        if zlib.crc32(struct.pack("<Q", length)) != hcrc:
+            raise RecordError("record header crc mismatch")
+        off += RECORD_HDR.size
+        if off + length + RECORD_FTR.size > n:
+            raise RecordError("truncated record payload")
+        payload = blob[off : off + length]
+        off += length
+        (pcrc,) = RECORD_FTR.unpack_from(blob, off)
+        off += RECORD_FTR.size
+        if zlib.crc32(payload) != pcrc:
+            raise RecordError("record payload crc mismatch")
+        yield payload
+
+
+def decode_single_record(blob: bytes) -> bytes:
+    payloads = list(decode_records(blob))
+    if len(payloads) != 1:
+        raise RecordError(f"expected 1 record, found {len(payloads)}")
+    return payloads[0]
+
+
+# ---------------------------------------------------------------------------
+# IMG1 payload
+# ---------------------------------------------------------------------------
+def encode_image(arr: np.ndarray) -> bytes:
+    arr = np.ascontiguousarray(arr)
+    if arr.ndim == 2:
+        arr = arr[:, :, None]
+    if arr.ndim != 3:
+        raise ValueError(f"image must be HxWxC, got shape {arr.shape}")
+    code = _DTYPE_CODES.get(arr.dtype)
+    if code is None:
+        raise ValueError(f"unsupported image dtype {arr.dtype}")
+    h, w, c = arr.shape
+    return IMG_HDR.pack(IMG_MAGIC, h, w, c, code) + arr.tobytes()
+
+
+def decode_image(payload: bytes) -> np.ndarray:
+    """``tf.image.decode_jpeg`` analogue (parse + validate + materialize)."""
+    if len(payload) < IMG_HDR.size:
+        raise RecordError("image payload too short")
+    magic, h, w, c, code = IMG_HDR.unpack_from(payload, 0)
+    if magic != IMG_MAGIC:
+        raise RecordError(f"bad image magic {magic!r}")
+    dtype = _DTYPES.get(code)
+    if dtype is None:
+        raise RecordError(f"bad image dtype code {code}")
+    body = payload[IMG_HDR.size :]
+    expected = h * w * c * np.dtype(dtype).itemsize
+    if len(body) != expected:
+        raise RecordError(f"image body {len(body)}B != expected {expected}B")
+    return np.frombuffer(body, dtype=dtype).reshape(h, w, c).copy()
+
+
+# ---------------------------------------------------------------------------
+# Preprocessing (the paper's mapped function, post-decode)
+# ---------------------------------------------------------------------------
+def convert_image_dtype(img: np.ndarray) -> np.ndarray:
+    """uint{8,16} -> float32 in [0,1] (tf.image.convert_image_dtype)."""
+    if img.dtype == np.uint8:
+        return img.astype(np.float32) / 255.0
+    if img.dtype == np.uint16:
+        return img.astype(np.float32) / 65535.0
+    return img.astype(np.float32)
+
+
+def resize_image(img: np.ndarray, out_h: int, out_w: int) -> np.ndarray:
+    """Bilinear resize (tf.image.resize_images analogue), pure numpy."""
+    h, w, c = img.shape
+    if (h, w) == (out_h, out_w):
+        return img
+    ys = np.linspace(0, h - 1, out_h, dtype=np.float32)
+    xs = np.linspace(0, w - 1, out_w, dtype=np.float32)
+    y0 = np.floor(ys).astype(np.int32)
+    x0 = np.floor(xs).astype(np.int32)
+    y1 = np.minimum(y0 + 1, h - 1)
+    x1 = np.minimum(x0 + 1, w - 1)
+    wy = (ys - y0.astype(np.float32))[:, None, None]
+    wx = (xs - x0.astype(np.float32))[None, :, None]
+    img = img.astype(np.float32)
+    top = img[y0][:, x0] * (1 - wx) + img[y0][:, x1] * wx
+    bot = img[y1][:, x0] * (1 - wx) + img[y1][:, x1] * wx
+    return top * (1 - wy) + bot * wy
+
+
+def preprocess_image(payload: bytes, out_h: int = 224, out_w: int = 224) -> np.ndarray:
+    """decode -> convert dtype -> resize: the full mapped function."""
+    img = decode_image(payload)
+    img = convert_image_dtype(img)
+    return resize_image(img, out_h, out_w)
+
+
+# ---------------------------------------------------------------------------
+# Dataset writers (one image per file, like ImageNet/Caltech-101 on disk)
+# ---------------------------------------------------------------------------
+def write_image_dataset(
+    storage,
+    n_images: int,
+    *,
+    mean_hw: Tuple[int, int] = (64, 64),
+    channels: int = 3,
+    n_classes: int = 101,
+    seed: int = 0,
+    prefix: str = "img",
+) -> Tuple[List[str], List[int]]:
+    """Write ``n_images`` single-image RRF1 files into ``storage``.
+
+    Image sizes are jittered around ``mean_hw`` to mimic a real photo corpus
+    (the paper's ImageNet subset has median 112 KB; Caltech-101 median 12 KB —
+    choose ``mean_hw`` accordingly).  Returns (paths, labels).
+    """
+    rng = np.random.default_rng(seed)
+    paths, labels = [], []
+    for i in range(n_images):
+        h = max(8, int(rng.normal(mean_hw[0], mean_hw[0] * 0.2)))
+        w = max(8, int(rng.normal(mean_hw[1], mean_hw[1] * 0.2)))
+        img = rng.integers(0, 256, size=(h, w, channels), dtype=np.uint8)
+        blob = encode_record(encode_image(img))
+        path = f"{prefix}_{i:06d}.rrf"
+        storage.write_file(path, blob)
+        paths.append(path)
+        labels.append(int(rng.integers(0, n_classes)))
+    return paths, labels
+
+
+def write_token_dataset(
+    storage,
+    n_shards: int,
+    docs_per_shard: int,
+    seq_len: int,
+    vocab_size: int,
+    *,
+    seed: int = 0,
+    prefix: str = "tokens",
+) -> List[str]:
+    """Write shards of token sequences (LM training corpus analogue).
+
+    Each shard file is a sequence of RRF1 records, one record per document,
+    payload = int32 token ids.
+    """
+    rng = np.random.default_rng(seed)
+    paths = []
+    for s in range(n_shards):
+        parts = []
+        for _ in range(docs_per_shard):
+            toks = rng.integers(0, vocab_size, size=(seq_len,), dtype=np.int32)
+            parts.append(encode_record(toks.tobytes()))
+        path = f"{prefix}_{s:05d}.rrf"
+        storage.write_file(path, b"".join(parts))
+        paths.append(path)
+    return paths
+
+
+def decode_token_shard(blob: bytes, seq_len: int) -> np.ndarray:
+    docs = [np.frombuffer(p, dtype=np.int32) for p in decode_records(blob)]
+    return np.stack([d[:seq_len] for d in docs])

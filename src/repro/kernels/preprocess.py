@@ -1,0 +1,46 @@
+"""Fused image normalize+cast — Pallas TPU kernel (input-pipeline hot spot).
+
+The paper's mapped function ends with convert_image_dtype + normalization on
+the CPU.  On a TPU pod the natural split (DESIGN.md hardware-adaptation) is:
+host decodes/resizes, device does the arithmetic.  This kernel fuses
+uint8->f32 cast, [0,1] scaling, and per-channel (x - mean)/std in one VMEM
+pass.
+
+TPU layout choice: NHWC with C=3 would waste 128-wide lanes, so the wrapper
+moves channels to the sublane dim: (B, C, H*W).  Each grid step handles one
+image's (C, PIX_TILE) tile; mean/std live in SMEM-like small refs (C, 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PIX_TILE = 2048
+
+
+def _normalize_kernel(x_ref, mean_ref, std_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32) * (1.0 / 255.0)   # (1, C, T)
+    mean = mean_ref[...][None, :, :]                     # (1, C, 1)
+    std = std_ref[...][None, :, :]
+    o_ref[...] = (x - mean) / std
+
+
+def normalize_images(x: jax.Array, mean: jax.Array, std: jax.Array,
+                     *, interpret: bool = True) -> jax.Array:
+    """x: (B, C, P) uint8, mean/std: (C,) -> (B, C, P) float32."""
+    B, C, P = x.shape
+    tile = min(PIX_TILE, P)
+    grid = (B, pl.cdiv(P, tile))
+    return pl.pallas_call(
+        _normalize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, C, tile), lambda b, i: (b, 0, i)),
+            pl.BlockSpec((C, 1), lambda b, i: (0, 0)),
+            pl.BlockSpec((C, 1), lambda b, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, tile), lambda b, i: (b, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((B, C, P), jnp.float32),
+        interpret=interpret,
+    )(x, mean.reshape(C, 1), std.reshape(C, 1))

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+# -- quantize ----------------------------------------------------------------
+def quantize_blocks_ref(x: jax.Array):
+    x = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.where(absmax == 0, 1.0, absmax / 127.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_blocks_ref(q: jax.Array, s: jax.Array):
+    return q.astype(jnp.float32) * s
+
+
+# -- preprocess -----------------------------------------------------------------
+def normalize_images_ref(x: jax.Array, mean: jax.Array, std: jax.Array):
+    xf = x.astype(jnp.float32) / 255.0
+    return (xf - mean[None, :, None]) / std[None, :, None]
+
+
+# -- flash attention ---------------------------------------------------------
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal=True):
+    """q/k/v: (BH, S, hd); naive softmax attention in fp32."""
+    BH, Sq, hd = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool), k=Skv - Sq)
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to fake the pod slice on CPU.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_smoke_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
+    """Small mesh for tests (requires >=prod(shape) fake devices)."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def devices_per_pod(mesh) -> int:
+    """Devices in one pod (everything except the 'pod' axis)."""
+    n = 1
+    for name, size in mesh.shape.items():
+        if name != "pod":
+            n *= size
+    return n

@@ -1,0 +1,281 @@
+"""Encoder-decoder LM (seamless-m4t-medium backbone).
+
+The speech/text frontend is a STUB per the assignment: the encoder consumes
+*precomputed frame embeddings* (B, T_src, d_model) — ``input_specs()``
+provides them — and the decoder is a standard causal LM with cross-attention
+over the encoder output.
+
+Step functions:
+  forward (train)  (frames, tokens) -> logits (B, S_dec, V)
+  prefill          encode + run decoder prompt, build (self KV, cross KV)
+  decode_step      one decoder token
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import (
+    apply_rope,
+    chunked_attention,
+    decode_attention,
+    embed,
+    rms_norm,
+    swiglu_mlp,
+    unembed,
+)
+from .transformer import (
+    _dtype,
+    _init_group,
+    attn_param_logical,
+    attn_param_shapes,
+    mlp_param_logical,
+    mlp_param_shapes,
+    _stack_logical,
+)
+
+Array = jax.Array
+
+
+def init_params(rng, cfg) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    D, Le, Ld, V = cfg.d_model, cfg.enc_layers, cfg.n_layers, cfg.padded_vocab
+    k_embed, k_enc, k_dec = jax.random.split(rng, 3)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(k_embed, (V, D), jnp.float32) / math.sqrt(D)).astype(dt),
+        "final_norm": jnp.zeros((D,), dt),
+        "enc_final_norm": jnp.zeros((D,), dt),
+        "encoder": {
+            "ln1": jnp.zeros((Le, D), dt),
+            "ln2": jnp.zeros((Le, D), dt),
+            "attn": _init_group(jax.random.fold_in(k_enc, 0),
+                                attn_param_shapes(cfg), dt, (Le,)),
+            "mlp": _init_group(jax.random.fold_in(k_enc, 1),
+                               mlp_param_shapes(cfg), dt, (Le,)),
+        },
+        "decoder": {
+            "ln1": jnp.zeros((Ld, D), dt),
+            "ln_x": jnp.zeros((Ld, D), dt),
+            "ln2": jnp.zeros((Ld, D), dt),
+            "attn": _init_group(jax.random.fold_in(k_dec, 0),
+                                attn_param_shapes(cfg), dt, (Ld,)),
+            "xattn": _init_group(jax.random.fold_in(k_dec, 1),
+                                 attn_param_shapes(cfg), dt, (Ld,)),
+            "mlp": _init_group(jax.random.fold_in(k_dec, 2),
+                               mlp_param_shapes(cfg), dt, (Ld,)),
+        },
+    }
+    return params
+
+
+def param_logical(cfg) -> Dict[str, Any]:
+    enc = {
+        "ln1": ("stack", None), "ln2": ("stack", None),
+        "attn": _stack_logical(attn_param_logical(cfg), 1),
+        "mlp": _stack_logical(mlp_param_logical(cfg), 1),
+    }
+    dec = {
+        "ln1": ("stack", None), "ln_x": ("stack", None), "ln2": ("stack", None),
+        "attn": _stack_logical(attn_param_logical(cfg), 1),
+        "xattn": _stack_logical(attn_param_logical(cfg), 1),
+        "mlp": _stack_logical(mlp_param_logical(cfg), 1),
+    }
+    return {
+        "embed": ("vocab", "d_model_w"),
+        "final_norm": (None,),
+        "enc_final_norm": (None,),
+        "encoder": enc,
+        "decoder": dec,
+    }
+
+
+def _qkv(p, x, cfg, positions, ctx, rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if ctx is not None:
+        q = ctx.constrain(q, "batch", "seq", "heads", "head_dim")
+        k = ctx.constrain(k, "batch", "seq", "kv_heads", "head_dim")
+        v = ctx.constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def encode(params, frames: Array, cfg, ctx=None,
+           *, q_chunk: int = 1024, kv_chunk: int = 1024,
+           remat: bool = True) -> Array:
+    """frames: (B, T_src, D) stub embeddings -> encoder output (B, T_src, D)."""
+    B, T, D = frames.shape
+    positions = jnp.arange(T)[None, :]
+    x = frames.astype(_dtype(cfg))
+    if ctx is not None:
+        x = ctx.constrain(x, "batch", "res_seq", "d_model")
+
+    def layer(x, blk):
+        h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+        q, k, v = _qkv(blk["attn"], h, cfg, positions, ctx)
+        o = chunked_attention(q, k, v, causal=False,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk, ctx=ctx)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, blk["attn"]["wo"])
+        h = rms_norm(x, blk["ln2"], cfg.norm_eps)
+        x = x + swiglu_mlp(h, blk["mlp"]["wi_gate"], blk["mlp"]["wi_up"],
+                           blk["mlp"]["wo"], ctx=ctx)
+        if ctx is not None:
+            x = ctx.constrain(x, "batch", "res_seq", "d_model")
+        return x, None
+
+    f = jax.checkpoint(layer) if remat else layer
+    x, _ = lax.scan(f, x, params["encoder"])
+    return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _decoder_stack(params, x, enc_out, cfg, ctx, positions,
+                   *, q_chunk, kv_chunk, remat):
+    """Training decoder: full causal self-attn + cross-attn over enc_out."""
+    def layer(x, blk):
+        h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+        q, k, v = _qkv(blk["attn"], h, cfg, positions, ctx)
+        o = chunked_attention(q, k, v, causal=True,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk, ctx=ctx)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, blk["attn"]["wo"])
+        # cross attention (queries from decoder, keys/values from encoder)
+        h = rms_norm(x, blk["ln_x"], cfg.norm_eps)
+        xq = jnp.einsum("bsd,dhk->bshk", h, blk["xattn"]["wq"])
+        xk = jnp.einsum("btd,dhk->bthk", enc_out, blk["xattn"]["wk"])
+        xv = jnp.einsum("btd,dhk->bthk", enc_out, blk["xattn"]["wv"])
+        o = chunked_attention(xq, xk, xv, causal=False,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk, ctx=ctx)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, blk["xattn"]["wo"])
+        h = rms_norm(x, blk["ln2"], cfg.norm_eps)
+        x = x + swiglu_mlp(h, blk["mlp"]["wi_gate"], blk["mlp"]["wi_up"],
+                           blk["mlp"]["wo"], ctx=ctx)
+        if ctx is not None:
+            x = ctx.constrain(x, "batch", "res_seq", "d_model")
+        return x, None
+
+    f = jax.checkpoint(layer) if remat else layer
+    x, _ = lax.scan(f, x, params["decoder"])
+    return x
+
+
+def forward(params, frames: Array, tokens: Array, cfg, ctx=None,
+            *, remat: bool = True, q_chunk: int = 1024, kv_chunk: int = 1024
+            ) -> Tuple[Array, Array]:
+    """Training step: returns (logits (B,S_dec,V), aux=0)."""
+    B, S = tokens.shape
+    enc_out = encode(params, frames, cfg, ctx,
+                     q_chunk=q_chunk, kv_chunk=kv_chunk, remat=remat)
+    positions = jnp.arange(S)[None, :]
+    x = embed(tokens, params["embed"], ctx)
+    x = _decoder_stack(params, x, enc_out, cfg, ctx, positions,
+                       q_chunk=q_chunk, kv_chunk=kv_chunk, remat=remat)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params["embed"], ctx)
+    return logits, jnp.float32(0)
+
+
+def init_cache(cfg, batch: int, max_len: int, enc_len: int, ctx=None) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    Ld, Hkv, hd = cfg.n_layers, cfg.padded_kv_heads, cfg.head_dim
+
+    def c(shape, logical):
+        arr = jnp.zeros(shape, dt)
+        if ctx is not None:
+            arr = ctx.constrain(arr, *logical)
+        return arr
+
+    return dict(
+        k=c((Ld, batch, max_len, Hkv, hd),
+            ("stack", "batch", "kv_seq", "kv_heads", "head_dim")),
+        v=c((Ld, batch, max_len, Hkv, hd),
+            ("stack", "batch", "kv_seq", "kv_heads", "head_dim")),
+        xk=c((Ld, batch, enc_len, Hkv, hd),
+             ("stack", "batch", "enc_seq", "kv_heads", "head_dim")),
+        xv=c((Ld, batch, enc_len, Hkv, hd),
+             ("stack", "batch", "enc_seq", "kv_heads", "head_dim")),
+        pos=jnp.int32(0),
+    )
+
+
+def prefill(params, frames: Array, tokens: Array, cache: Dict[str, Any],
+            cfg, ctx=None, *, q_chunk: int = 1024, kv_chunk: int = 1024
+            ) -> Tuple[Array, Dict[str, Any]]:
+    """Encode source frames + run the decoder prompt, filling both caches."""
+    B, S = tokens.shape
+    enc_out = encode(params, frames, cfg, ctx, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                     remat=False)
+    positions = jnp.arange(S)[None, :]
+    x = embed(tokens, params["embed"], ctx)
+    max_len = cache["k"].shape[2]
+
+    def layer(x, blk):
+        h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+        q, k, v = _qkv(blk["attn"], h, cfg, positions, ctx)
+        o = chunked_attention(q, k, v, causal=True,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk, ctx=ctx)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, blk["attn"]["wo"])
+        h = rms_norm(x, blk["ln_x"], cfg.norm_eps)
+        xq = jnp.einsum("bsd,dhk->bshk", h, blk["xattn"]["wq"])
+        xk = jnp.einsum("btd,dhk->bthk", enc_out, blk["xattn"]["wk"])
+        xv = jnp.einsum("btd,dhk->bthk", enc_out, blk["xattn"]["wv"])
+        o = chunked_attention(xq, xk, xv, causal=False,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk, ctx=ctx)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, blk["xattn"]["wo"])
+        h = rms_norm(x, blk["ln2"], cfg.norm_eps)
+        x = x + swiglu_mlp(h, blk["mlp"]["wi_gate"], blk["mlp"]["wi_up"],
+                           blk["mlp"]["wo"], ctx=ctx)
+        if ctx is not None:
+            x = ctx.constrain(x, "batch", "res_seq", "d_model")
+        pad = [(0, 0), (0, max_len - S), (0, 0), (0, 0)]
+        return x, (jnp.pad(k, pad).astype(_dtype(cfg)),
+                   jnp.pad(v, pad).astype(_dtype(cfg)),
+                   xk.astype(_dtype(cfg)), xv.astype(_dtype(cfg)))
+
+    x, (ks, vs, xks, xvs) = lax.scan(layer, x, params["decoder"])
+    new_cache = dict(k=ks, v=vs, xk=xks, xv=xvs, pos=jnp.int32(S))
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params["embed"], ctx)[:, 0]
+    return logits, new_cache
+
+
+def decode_step(params, token: Array, cache: Dict[str, Any], cfg, ctx=None
+                ) -> Tuple[Array, Dict[str, Any]]:
+    B = token.shape[0]
+    pos = cache["pos"]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    x = embed(token, params["embed"], ctx)
+    enc_len = cache["xk"].shape[2]
+
+    def layer(x, xs):
+        blk, k_cache, v_cache, xk, xv = xs
+        h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+        q, k, v = _qkv(blk["attn"], h, cfg, positions, ctx)
+        k_cache = lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, pos, 0, 0))
+        v_cache = lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, pos, 0, 0))
+        o = decode_attention(q, k_cache, v_cache, pos + 1, ctx=ctx)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, blk["attn"]["wo"])
+        h = rms_norm(x, blk["ln_x"], cfg.norm_eps)
+        xq = jnp.einsum("bsd,dhk->bshk", h, blk["xattn"]["wq"])
+        o = decode_attention(xq, xk, xv, jnp.int32(enc_len), ctx=ctx)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, blk["xattn"]["wo"])
+        h = rms_norm(x, blk["ln2"], cfg.norm_eps)
+        x = x + swiglu_mlp(h, blk["mlp"]["wi_gate"], blk["mlp"]["wi_up"],
+                           blk["mlp"]["wo"], ctx=ctx)
+        return x, (k_cache, v_cache)
+
+    x, (ks, vs) = lax.scan(
+        layer, x,
+        (params["decoder"], cache["k"], cache["v"], cache["xk"], cache["xv"]),
+    )
+    new_cache = dict(k=ks, v=vs, xk=cache["xk"], xv=cache["xv"], pos=pos + 1)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params["embed"], ctx)[:, 0]
+    return logits, new_cache

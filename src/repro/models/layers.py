@@ -1,0 +1,362 @@
+"""Shared model layers (pure-functional JAX).
+
+Conventions:
+* params are plain dicts of jnp arrays; layer stacks carry a leading
+  ``n_layers`` dim and are consumed by ``lax.scan``.
+* activations are bf16 (cfg.dtype); norms/softmax/rope run in fp32.
+* every function takes a :class:`repro.sharding.rules.ShardingCtx` (``ctx``)
+  whose ``constrain`` is a no-op without a mesh (CPU smoke tests).
+* attention is **chunked online-softmax** over KV blocks (lax.scan), so
+  logits for 32k/500k sequences are never materialized — the jnp analogue
+  of flash attention, and the baseline the Pallas kernel competes with.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def cast(x: Array, dtype) -> Array:
+    return x.astype(dtype) if x.dtype != dtype else x
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: Array, weight: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(var + eps) * (1.0 + weight.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def gated_rms_norm(y: Array, z: Array, weight: Array, eps: float = 1e-6) -> Array:
+    """Mamba2's norm: RMSNorm(y * silu(z))."""
+    dtype = y.dtype
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    out = yf * lax.rsqrt(var + eps) * (1.0 + weight.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE and qwen2-vl's 3-section M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]                       # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_sections(hd: int) -> Tuple[int, int, int]:
+    """qwen2-vl uses (16,24,24) on hd/2=64, i.e. (1/4, 3/8, 3/8)."""
+    half = hd // 2
+    s1 = half // 4
+    s2 = (half * 3) // 8
+    return (s1, s2, half - s1 - s2)
+
+
+def apply_mrope(x: Array, positions_thw: Array, theta: float) -> Array:
+    """qwen2-vl M-RoPE. positions_thw: (3, ..., S) — temporal/height/width
+    position ids (text tokens have t=h=w=index; the vision stub supplies
+    patch grids)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    # build per-dim angles by section
+    sec = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32)
+        for i, s in enumerate(mrope_sections(hd))
+    ])                                                   # (hd/2,) in {0,1,2}
+    pos = jnp.take(positions_thw.astype(jnp.float32), sec, axis=0)  # (hd/2, ..., S)
+    pos = jnp.moveaxis(pos, 0, -1)                      # (..., S, hd/2)
+    angles = (pos * freqs)[..., None, :]                # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked attention (online softmax over KV blocks)
+# ---------------------------------------------------------------------------
+def _chunk_attn_masked(
+    q: Array,              # (B, qc, H, hd) fp32-scaled
+    k: Array,              # (B, kc, Hkv, hd)
+    v: Array,              # (B, kc, Hkv, hd)
+    q_pos: Array,          # (qc,) absolute positions
+    kv_pos: Array,         # (kc,)
+    carry,                 # (acc (B,qc,H,hd) f32, m (B,qc,H) f32, l (B,qc,H) f32)
+    *,
+    causal: bool,
+    window: Optional[Array],   # scalar int32 or None: kv_pos > q_pos - window
+    kv_valid: Optional[Array] = None,  # (kc,) bool extra mask (decode length)
+):
+    acc, m, l = carry
+    B, qc, H, hd = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    qg = q.reshape(B, qc, Hkv, group, hd)
+    # logits: (B, qc, Hkv, group, kc)
+    logits = jnp.einsum(
+        "bqhgd,bkhd->bqhgk", qg.astype(jnp.float32), k.astype(jnp.float32)
+    )
+    mask = jnp.ones((qc, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= kv_pos[None, :] > (q_pos[:, None] - window)
+    if kv_valid is not None:
+        mask &= kv_valid[None, :]
+    logits = jnp.where(mask[None, :, None, None, :], logits, NEG_INF)
+    m_new = jnp.maximum(m, logits.max(axis=-1).reshape(B, qc, H))
+    # renormalize old accumulator
+    scale_old = jnp.exp(m - m_new)
+    p = jnp.exp(logits - m_new.reshape(B, qc, Hkv, group)[..., None])
+    l_new = l * scale_old + p.sum(axis=-1).reshape(B, qc, H)
+    pv = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    acc_new = acc * scale_old[..., None] + pv.reshape(B, qc, H, hd)
+    return acc_new, m_new, l_new
+
+
+def chunked_attention(
+    q: Array,               # (B, Sq, H, hd)
+    k: Array,               # (B, Skv, Hkv, hd)
+    v: Array,
+    *,
+    causal: bool = True,
+    q_offset: int | Array = 0,       # absolute position of q[0]
+    window: Optional[Array] = None,  # scalar or None
+    kv_valid: Optional[Array] = None,  # (Skv,) bool
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    ctx=None,
+) -> Array:
+    """Online-softmax attention; never materializes (Sq, Skv) logits.
+
+    The default path (no ``kv_valid``/``q_offset``) uses the custom-VJP
+    flash implementation: the backward pass recomputes probability blocks
+    instead of storing per-chunk residuals (see models/flash.py) — this is
+    what keeps the train-cell HBM footprint inside 16 GiB.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    if kv_valid is None and (isinstance(q_offset, int) and q_offset == 0):
+        from .flash import flash_attention_train
+
+        return flash_attention_train(
+            q, k, v, causal=causal, window=window,
+            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    out_dtype = q.dtype
+    sm_scale = 1.0 / math.sqrt(hd)
+    q = (q.astype(jnp.float32) * sm_scale).astype(q.dtype)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    nq = max(1, Sq // q_chunk)
+    nk = max(1, Skv // kv_chunk)
+    # require even chunking (shapes here are powers of two)
+    if Sq % q_chunk or Skv % kv_chunk:
+        q_chunk, nq = Sq, 1
+        kv_chunk, nk = Skv, 1
+
+    kc = k.reshape(B, nk, kv_chunk, Hkv, hd)
+    vc = v.reshape(B, nk, kv_chunk, Hkv, hd)
+    kv_pos_all = jnp.arange(Skv).reshape(nk, kv_chunk)
+    kv_valid_all = (
+        kv_valid.reshape(nk, kv_chunk) if kv_valid is not None else None
+    )
+
+    def one_q_chunk(qi, q_blk):
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        init = (
+            jnp.zeros((B, q_chunk, H, hd), jnp.float32),
+            jnp.full((B, q_chunk, H), NEG_INF, jnp.float32),
+            jnp.zeros((B, q_chunk, H), jnp.float32),
+        )
+
+        def body(carry, xs):
+            k_blk, v_blk, kv_pos, kv_ok = xs
+            carry = _chunk_attn_masked(
+                q_blk, k_blk, v_blk, q_pos, kv_pos, carry,
+                causal=causal, window=window, kv_valid=kv_ok,
+            )
+            return carry, None
+
+        xs = (
+            jnp.moveaxis(kc, 1, 0),
+            jnp.moveaxis(vc, 1, 0),
+            kv_pos_all,
+            kv_valid_all if kv_valid_all is not None
+            else jnp.ones((nk, kv_chunk), bool),
+        )
+        (acc, _m, l), _ = lax.scan(body, init, xs)
+        return (acc / jnp.maximum(l[..., None], 1e-30)).astype(out_dtype)
+
+    if nq == 1:
+        return one_q_chunk(0, q)
+    qc = q.reshape(B, nq, q_chunk, H, hd)
+    out = lax.map(
+        lambda i: one_q_chunk(i, qc[:, i]), jnp.arange(nq)
+    )  # (nq, B, q_chunk, H, hd)
+    return jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, hd)
+
+
+def decode_attention(
+    q: Array,          # (B, 1, H, hd)
+    k_cache: Array,    # (B, Skv, Hkv, hd)
+    v_cache: Array,
+    cur_len: Array,    # scalar int32: number of valid cache entries
+    *,
+    window: Optional[Array] = None,
+    ctx=None,
+) -> Array:
+    """Single-token attention against a (possibly seq-sharded) KV cache."""
+    B, _, H, hd = q.shape
+    Skv, Hkv = k_cache.shape[1], k_cache.shape[2]
+    group = H // Hkv
+    sm_scale = 1.0 / math.sqrt(hd)
+    qg = (q.astype(jnp.float32) * sm_scale).reshape(B, Hkv, group, hd)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32))
+    kv_pos = jnp.arange(Skv)
+    mask = kv_pos < cur_len
+    if window is not None:
+        mask &= kv_pos > (cur_len - 1 - window)
+    logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN: SwiGLU MLP and top-k MoE
+# ---------------------------------------------------------------------------
+def swiglu_mlp(x: Array, wi_gate: Array, wi_up: Array, wo: Array, ctx=None) -> Array:
+    h = jax.nn.silu(x @ wi_gate) * (x @ wi_up)
+    if ctx is not None:
+        h = ctx.constrain(h, "batch", "seq", "d_ff")
+    return h @ wo
+
+
+def moe_block(
+    x: Array,                # (B, S, D)
+    router_w: Array,         # (D, E)
+    wi_gate: Array,          # (E, D, F)
+    wi_up: Array,            # (E, D, F)
+    wo: Array,               # (E, F, D)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    chunk: int = 256,
+    ctx=None,
+) -> Tuple[Array, Array]:
+    """Capacity-based top-k MoE (GShard-style dispatch/combine einsums),
+    grouped over sequence chunks so dispatch tensors stay small.
+
+    Returns (output, aux_loss) — aux is the load-balancing loss.
+    """
+    B, S, D = x.shape
+    E = router_w.shape[-1]
+    dtype = x.dtype
+    T = B * S
+    chunk = min(chunk, T)
+    if T % chunk:
+        chunk = T
+    G = T // chunk
+    cap = max(top_k, int(math.ceil(chunk * top_k / E * capacity_factor)))
+
+    xt = x.reshape(G, chunk, D)
+    if ctx is not None:
+        # keep the group dim fully sharded: without this GSPMD replicates
+        # the (G,chunk,E,cap) dispatch tensors (TB-scale for 16e MoEs)
+        xt = ctx.constrain(xt, "moe_groups", None, "d_model")
+    logits = (xt.astype(jnp.float32) @ router_w.astype(jnp.float32))  # (G,c,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, topk_idx = lax.top_k(probs, top_k)                      # (G,c,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9
+    )  # renormalize over chosen experts (mixtral convention)
+
+    sel = jax.nn.one_hot(topk_idx, E, dtype=jnp.float32)               # (G,c,k,E)
+    # position of each (token, slot) within its expert queue
+    pos = jnp.cumsum(sel.reshape(G, chunk * top_k, E), axis=1).reshape(
+        G, chunk, top_k, E
+    ) - sel
+    keep = (pos < cap) * sel                                           # (G,c,k,E)
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[..., None]
+    dispatch = pos_oh.sum(axis=2)                                      # (G,c,E,cap)
+    combine = (gate_vals[..., None] * keep)[..., None] * pos_oh
+    combine = combine.sum(axis=2)                                      # (G,c,E,cap)
+
+    # dispatch: (g, t, e, c) x tokens (g, t, d) -> expert inputs (g, e, c, d)
+    # dispatch entries are {0,1} and combine weights are softmax outputs —
+    # bf16 is exact/safe here and halves the dispatch-tensor bytes
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(dtype), xt)
+    if ctx is not None:
+        xe = ctx.constrain(xe, "moe_groups", "experts", None, "d_model")
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, wi_gate)) * jnp.einsum(
+        "gecd,edf->gecf", xe, wi_up
+    )
+    if ctx is not None:
+        h = ctx.constrain(h, "moe_groups", "experts", None, "d_ff")
+    ye = jnp.einsum("gecf,efd->gecd", h, wo)                           # (G,E,cap,D)
+    if ctx is not None:
+        ye = ctx.constrain(ye, "moe_groups", "experts", None, "d_model")
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(dtype), ye)
+    y = y.reshape(B, S, D)
+
+    # load-balancing aux loss (Switch-style)
+    me = probs.mean(axis=(0, 1))                       # mean router prob per expert
+    ce = sel.sum(axis=2).mean(axis=(0, 1))             # fraction routed per expert
+    aux = E * jnp.sum(me * ce)
+    return y, aux.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def embed(tokens: Array, table: Array, ctx=None, scale: Optional[float] = None) -> Array:
+    if ctx is not None and ctx.mesh is not None:
+        # one-hot matmul instead of gather: with a (vocab x d_model)-sharded
+        # table, gather (and its scatter-add transpose) force GSPMD into
+        # full rematerialization; the matmul form shards cleanly and its
+        # backward is a plain einsum (measured -9 GiB/device on 33B train)
+        onehot = jax.nn.one_hot(tokens, table.shape[0], dtype=table.dtype)
+        onehot = ctx.constrain(onehot, "batch", "res_seq", "vocab")
+        x = onehot @ table
+    else:
+        x = jnp.take(table, tokens, axis=0)
+    if scale is not None:
+        x = (x.astype(jnp.float32) * scale).astype(x.dtype)
+    if ctx is not None:
+        x = ctx.constrain(x, "batch", "res_seq", "d_model")
+    return x
+
+
+def unembed(x: Array, table: Array, ctx=None) -> Array:
+    logits = x @ table.T.astype(x.dtype)
+    if ctx is not None:
+        # keep the LM head sequence-parallel: without res_seq here the head
+        # (logits fp32, lse, label one-hots and their grads) runs with seq
+        # gathered — several full (B,S,D)/(B,S,V) fp32 buffers per device
+        logits = ctx.constrain(logits, "batch", "res_seq", "vocab")
+    return logits

@@ -1,0 +1,264 @@
+"""Mamba2 — SSD (state-space duality) mixer, chunked scan + O(1) decode.
+
+Follows the Mamba2 paper (arXiv:2405.21060), ngroups=1:
+
+    h_t = a_t * h_{t-1} + dt_t * B_t ⊗ x_t        a_t = exp(dt_t * A)
+    y_t = C_t · h_t + D * x_t
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+compute inside chunks of length Q, linear recurrence across chunks — the
+TPU-friendly formulation (dense matmuls for the MXU, one small scan).
+Decode keeps (state, conv window) caches and costs O(1) per token.
+
+Parameter layout per layer (stacked with leading n_layers dim by the model):
+    in_proj:  (D, 2*d_inner + 2*N + H)   -> z, x, B, C, dt
+    conv_w:   (W, d_inner + 2*N)          causal depthwise conv
+    conv_b:   (d_inner + 2*N,)
+    dt_bias:  (H,)
+    A_log:    (H,)
+    D:        (H,)
+    norm_w:   (d_inner,)                  gated RMSNorm
+    out_proj: (d_inner, D)
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import gated_rms_norm
+
+Array = jax.Array
+
+
+def mamba_param_shapes(cfg) -> Dict[str, tuple]:
+    din, N, H, W = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv_width
+    D = cfg.d_model
+    return dict(
+        in_proj=(D, 2 * din + 2 * N + H),
+        conv_w=(W, din + 2 * N),
+        conv_b=(din + 2 * N,),
+        dt_bias=(H,),
+        A_log=(H,),
+        D=(H,),
+        norm_w=(din,),
+        out_proj=(din, D),
+    )
+
+
+def mamba_param_logical(cfg) -> Dict[str, tuple]:
+    return dict(
+        in_proj=("d_model_w", "d_inner"),
+        conv_w=("conv_w", "d_inner"),
+        conv_b=("d_inner",),
+        dt_bias=(None,),
+        A_log=(None,),
+        D=(None,),
+        norm_w=("d_inner",),
+        out_proj=("d_inner", "d_model_w"),
+    )
+
+
+def init_mamba_params(rng, cfg, dtype) -> Dict[str, Array]:
+    shapes = mamba_param_shapes(cfg)
+    keys = jax.random.split(rng, len(shapes))
+    params = {}
+    for (name, shape), key in zip(sorted(shapes.items()), keys):
+        if name == "A_log":
+            params[name] = jnp.log(
+                jax.random.uniform(key, shape, jnp.float32, 1.0, 16.0)
+            )
+        elif name == "dt_bias":
+            # dt init: softplus^-1(uniform [1e-3, 1e-1])
+            dt = jnp.exp(
+                jax.random.uniform(key, shape, jnp.float32)
+                * (math.log(1e-1) - math.log(1e-3)) + math.log(1e-3)
+            )
+            params[name] = dt + jnp.log(-jnp.expm1(-dt))
+        elif name == "D":
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name in ("norm_w", "conv_b"):
+            params[name] = jnp.zeros(shape, dtype)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            params[name] = (
+                jax.random.normal(key, shape, jnp.float32) / math.sqrt(fan_in)
+            ).astype(dtype)
+    return params
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over (B, L, C) with taps w: (W, C)."""
+    W = w.shape[0]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(W):
+        shift = W - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(
+    x: Array,      # (B, L, H, P)  already multiplied by nothing (dt applied inside)
+    dt: Array,     # (B, L, H)     post-softplus
+    A: Array,      # (H,)          negative
+    Bm: Array,     # (B, L, N)
+    Cm: Array,     # (B, L, N)
+    D: Array,      # (H,)
+    *,
+    chunk: int = 128,
+    init_state: Optional[Array] = None,   # (B, H, P, N)
+) -> Tuple[Array, Array]:
+    """Chunked SSD scan.  Returns (y: (B,L,H,P), final_state: (B,H,P,N))."""
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    if L % chunk:
+        chunk = L
+    nc = L // chunk
+
+    loga = (dt * A.astype(jnp.float32)).reshape(Bsz, nc, chunk, H)   # log a_t < 0
+    xdt = (x.astype(jnp.float32) * dt[..., None]).reshape(Bsz, nc, chunk, H, P)
+    Bc = Bm.astype(jnp.float32).reshape(Bsz, nc, chunk, N)
+    Cc = Cm.astype(jnp.float32).reshape(Bsz, nc, chunk, N)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    s0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((Bsz, H, P, N), jnp.float32)
+    )
+
+    def body(s_prev, xs):
+        la, xd, b, c = xs               # (B,Q,H), (B,Q,H,P), (B,Q,N), (B,Q,N)
+        cl = jnp.cumsum(la, axis=1)     # (B,Q,H) inclusive
+        # intra-chunk: y[t] = sum_{s<=t} C_t·B_s * exp(cl_t - cl_s) * xdt_s
+        diff = cl[:, :, None, :] - cl[:, None, :, :]        # (B,Q,Q,H) t,s
+        Lmat = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        cb = jnp.einsum("btn,bsn->bts", c, b)               # (B,Q,Q)
+        y_intra = jnp.einsum("bts,btsh,bshp->bthp", cb, Lmat, xd)
+        # inter-chunk: y[t] += C_t · (exp(cl_t) * S_prev)
+        y_inter = jnp.einsum(
+            "btn,bth,bhpn->bthp", c, jnp.exp(cl), s_prev
+        )
+        # state update: S' = S * prod(a) + sum_s exp(cl_end - cl_s) B_s ⊗ xdt_s
+        decay_to_end = jnp.exp(cl[:, -1:, :] - cl)          # (B,Q,H)
+        S_c = jnp.einsum("bsh,bsn,bshp->bhpn", decay_to_end, b, xd)
+        s_new = s_prev * jnp.exp(cl[:, -1, :])[:, :, None, None] + S_c
+        return s_new, y_intra + y_inter
+
+    xs = (
+        jnp.moveaxis(loga, 1, 0),
+        jnp.moveaxis(xdt, 1, 0),
+        jnp.moveaxis(Bc, 1, 0),
+        jnp.moveaxis(Cc, 1, 0),
+    )
+    # remat the chunk body: the (B,Q,Q,H) intra-chunk decay/prob tensors are
+    # recomputed in the backward sweep instead of being stored once per chunk
+    # (nc x 134 MB/device for jamba — the dominant train-memory term before)
+    s_final, y_chunks = lax.scan(jax.checkpoint(body), s0, xs)  # y: (nc,B,Q,H,P)
+    y = jnp.moveaxis(y_chunks, 0, 1).reshape(Bsz, L, H, P)
+    y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[None, None, :, None]
+    return y, s_final
+
+
+def mamba_forward(
+    params: Dict[str, Array],
+    u: Array,                       # (B, L, D)
+    cfg,
+    *,
+    ctx=None,
+    chunk: int = 128,
+    init_state: Optional[Array] = None,
+    return_cache: bool = False,
+) -> Tuple[Array, Any]:
+    """Full Mamba2 block (train/prefill).
+
+    Returns (out (B,L,D), final_state) — or, with ``return_cache``,
+    (out, (final_state, conv_window)) where conv_window is the raw last
+    W-1 pre-conv inputs needed to continue decoding."""
+    Bsz, L, _ = u.shape
+    din, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    W = cfg.ssm_conv_width
+
+    proj = u @ params["in_proj"]                     # (B,L, 2din+2N+H)
+    z, xBC_raw, dt_raw = jnp.split(proj, [din, 2 * din + 2 * N], axis=-1)
+    if ctx is not None:
+        # mamba mixes over time, not channels: shard d_inner (heads) across
+        # 'model' and keep seq whole — the dual of attention's layout
+        z = ctx.constrain(z, "batch", "seq", "d_inner")
+        xBC_raw = ctx.constrain(xBC_raw, "batch", "seq", "d_inner")
+    xBC = jax.nn.silu(_causal_conv(xBC_raw, params["conv_w"], params["conv_b"]))
+    x, Bm, Cm = jnp.split(xBC, [din, din + N], axis=-1)
+    if ctx is not None:
+        x = ctx.constrain(x, "batch", "seq", "d_inner")
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )                                                # (B,L,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, s_final = ssd_chunked(
+        x.reshape(Bsz, L, H, P), dt, A, Bm, Cm, params["D"],
+        chunk=chunk, init_state=init_state,
+    )
+    y = y.reshape(Bsz, L, din).astype(u.dtype)
+    y = gated_rms_norm(y, z, params["norm_w"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if return_cache:
+        # pad on the left if the prompt is shorter than the conv window
+        tail = xBC_raw[:, -(W - 1):, :]
+        if L < W - 1:
+            tail = jnp.pad(tail, ((0, 0), (W - 1 - L, 0), (0, 0)))
+        return out, (s_final, tail)
+    return out, s_final
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.float32) -> Dict[str, Array]:
+    din, N, H, W = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv_width
+    P = cfg.ssm_head_dim
+    return dict(
+        state=jnp.zeros((batch, H, P, N), jnp.float32),
+        conv=jnp.zeros((batch, W - 1, din + 2 * N), dtype),
+    )
+
+
+def mamba_decode(
+    params: Dict[str, Array],
+    u: Array,                       # (B, 1, D)
+    cache: Dict[str, Array],
+    cfg,
+) -> Tuple[Array, Dict[str, Array]]:
+    """O(1) single-token step: conv window update + state recurrence."""
+    Bsz = u.shape[0]
+    din, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+
+    proj = (u[:, 0] @ params["in_proj"])             # (B, 2din+2N+H)
+    z, xBC, dt_raw = jnp.split(proj, [din, 2 * din + 2 * N], axis=-1)
+    # conv over cached window + current input
+    win = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)  # (B,W,C)
+    w = params["conv_w"].astype(jnp.float32)         # (W,C)
+    conv_out = (win.astype(jnp.float32) * w[None]).sum(axis=1) + params[
+        "conv_b"
+    ].astype(jnp.float32)
+    xBC_t = jax.nn.silu(conv_out).astype(u.dtype)
+    x, Bm, Cm = jnp.split(xBC_t, [din, din + N], axis=-1)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )                                                # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)                              # (B,H)
+    xh = x.reshape(Bsz, H, P).astype(jnp.float32) * dt[..., None]
+    dstate = jnp.einsum("bhp,bn->bhpn", xh, Bm.astype(jnp.float32))
+    state = cache["state"] * a[:, :, None, None] + dstate
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(jnp.float32))
+    y = y + x.reshape(Bsz, H, P).astype(jnp.float32) * params["D"].astype(
+        jnp.float32
+    )[None, :, None]
+    y = y.reshape(Bsz, din).astype(u.dtype)
+    y = gated_rms_norm(y[:, None, :], z[:, None, :], params["norm_w"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    new_cache = dict(state=state, conv=win[:, 1:, :])
+    return out, new_cache

@@ -1,0 +1,42 @@
+"""arch-id -> model functions (init / forward / prefill / decode / cache)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict
+
+from . import encdec, transformer
+
+
+@dataclass(frozen=True)
+class ModelFns:
+    init_params: Callable
+    param_logical: Callable
+    forward: Callable          # train-style full forward -> (logits, aux)
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+    is_encdec: bool = False
+
+
+DECODER_ONLY = ModelFns(
+    init_params=transformer.init_params,
+    param_logical=transformer.param_logical,
+    forward=transformer.forward,
+    prefill=transformer.prefill,
+    decode_step=transformer.decode_step,
+    init_cache=transformer.init_cache,
+)
+
+ENC_DEC = ModelFns(
+    init_params=encdec.init_params,
+    param_logical=encdec.param_logical,
+    forward=encdec.forward,
+    prefill=encdec.prefill,
+    decode_step=encdec.decode_step,
+    init_cache=encdec.init_cache,
+    is_encdec=True,
+)
+
+
+def model_fns(cfg) -> ModelFns:
+    return ENC_DEC if cfg.family == "encdec" else DECODER_ONLY

@@ -1,0 +1,694 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid families.
+
+One module, four block layouts:
+
+* dense / moe   — scan over ``n_layers`` of [attn + (mlp|moe)]
+* ssm (mamba2)  — scan over ``n_layers`` of [mamba]
+* hybrid (jamba)— scan over ``n_layers//attn_period`` *periods*; each period
+                  is 1 attention block + (attn_period-1) mamba blocks, with
+                  the FFN alternating dense-MLP / MoE per ``moe_period``.
+
+All step functions are cache-aware:
+  forward  (train)                 tokens (B,S)   -> logits (B,S,V)
+  prefill                          tokens (B,S)   -> (last-token logits, cache)
+  decode   (one token w/ KV cache) token  (B,1)   -> (logits, cache)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import mamba as mamba_lib
+from .layers import (
+    apply_mrope,
+    apply_rope,
+    chunked_attention,
+    decode_attention,
+    embed,
+    moe_block,
+    rms_norm,
+    swiglu_mlp,
+    unembed,
+)
+
+Array = jax.Array
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _embed_scale(cfg) -> Optional[float]:
+    return math.sqrt(cfg.d_model) if "gemma" in cfg.name else None
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+def _norm_init(rng, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def _dense_init(rng, shape, dtype, fan_in_axes=(0,)):
+    fan_in = 1
+    for a in fan_in_axes:
+        fan_in *= shape[a]
+    return (jax.random.normal(rng, shape, jnp.float32) / math.sqrt(fan_in)).astype(dtype)
+
+
+def attn_param_shapes(cfg) -> Dict[str, tuple]:
+    # padded head counts: clean 16-way TP (see ModelConfig.padded_heads)
+    D, H, Hkv, hd = cfg.d_model, cfg.padded_heads, cfg.padded_kv_heads, cfg.head_dim
+    shapes = dict(
+        wq=(D, H, hd), wk=(D, Hkv, hd), wv=(D, Hkv, hd), wo=(H, hd, D),
+    )
+    if cfg.qk_norm:
+        shapes.update(q_norm=(hd,), k_norm=(hd,))
+    return shapes
+
+
+def attn_param_logical(cfg) -> Dict[str, tuple]:
+    log = dict(
+        wq=("d_model_w", "heads", "head_dim"),
+        wk=("d_model_w", "kv_heads", "head_dim"),
+        wv=("d_model_w", "kv_heads", "head_dim"),
+        wo=("heads", "head_dim", "d_model_w"),
+    )
+    if cfg.qk_norm:
+        log.update(q_norm=(None,), k_norm=(None,))
+    return log
+
+
+def mlp_param_shapes(cfg) -> Dict[str, tuple]:
+    return dict(
+        wi_gate=(cfg.d_model, cfg.d_ff),
+        wi_up=(cfg.d_model, cfg.d_ff),
+        wo=(cfg.d_ff, cfg.d_model),
+    )
+
+
+def mlp_param_logical(cfg) -> Dict[str, tuple]:
+    return dict(
+        wi_gate=("d_model_w", "d_ff"),
+        wi_up=("d_model_w", "d_ff"),
+        wo=("d_ff", "d_model_w"),
+    )
+
+
+def moe_param_shapes(cfg) -> Dict[str, tuple]:
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    return dict(
+        router=(D, E),
+        wi_gate=(E, D, F), wi_up=(E, D, F), wo=(E, F, D),
+    )
+
+
+def moe_param_logical(cfg) -> Dict[str, tuple]:
+    return dict(
+        router=("d_model_w", None),
+        wi_gate=("experts", "d_model_w", "d_ff"),
+        wi_up=("experts", "d_model_w", "d_ff"),
+        wo=("experts", "d_ff", "d_model_w"),
+    )
+
+
+def _init_group(rng, shapes: Dict[str, tuple], dtype, stack: tuple = ()) -> Dict[str, Array]:
+    out = {}
+    keys = jax.random.split(rng, len(shapes))
+    for (name, shape), key in zip(sorted(shapes.items()), keys):
+        full = tuple(stack) + tuple(shape)
+        if name.endswith("norm") or name in ("q_norm", "k_norm"):
+            out[name] = jnp.zeros(full, dtype)
+        else:
+            fan_in_axes = (len(stack),) if len(shape) >= 2 else (0,)
+            # contraction dim(s): everything but the last axis for >=2D
+            fi = 1
+            for a in range(len(stack), len(full) - 1):
+                fi *= full[a]
+            out[name] = (
+                jax.random.normal(key, full, jnp.float32) / math.sqrt(max(fi, 1))
+            ).astype(dtype)
+    return out
+
+
+def _stack_logical(logical: Dict[str, tuple], n_stack: int) -> Dict[str, tuple]:
+    return {k: tuple(["stack"] * n_stack) + tuple(v) for k, v in logical.items()}
+
+
+def init_params(rng, cfg) -> Dict[str, Any]:
+    """Initialize the full parameter pytree (stacked for scan)."""
+    dt = _dtype(cfg)
+    k_embed, k_blocks, k_head = jax.random.split(rng, 3)
+    V, D, L = cfg.padded_vocab, cfg.d_model, cfg.n_layers
+    params: Dict[str, Any] = {
+        "embed": _dense_init(k_embed, (V, D), dt, fan_in_axes=(1,)),
+        "final_norm": jnp.zeros((D,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = _dense_init(k_head, (V, D), dt, fan_in_axes=(1,))
+
+    if cfg.family in ("dense", "moe"):
+        blocks: Dict[str, Any] = {
+            "ln1": jnp.zeros((L, D), dt),
+            "ln2": jnp.zeros((L, D), dt),
+            "attn": _init_group(jax.random.fold_in(k_blocks, 0),
+                                attn_param_shapes(cfg), dt, (L,)),
+        }
+        if cfg.is_moe:
+            blocks["moe"] = _init_group(jax.random.fold_in(k_blocks, 1),
+                                        moe_param_shapes(cfg), dt, (L,))
+        else:
+            blocks["mlp"] = _init_group(jax.random.fold_in(k_blocks, 1),
+                                        mlp_param_shapes(cfg), dt, (L,))
+        params["blocks"] = blocks
+    elif cfg.family == "ssm":
+        # one random draw broadcast across layers (init speed; per-layer
+        # randomness is irrelevant to the systems experiments here)
+        base = mamba_lib.init_mamba_params(jax.random.fold_in(k_blocks, 0), cfg, dt)
+        mam = {k: jnp.broadcast_to(v, (L,) + v.shape).copy() for k, v in base.items()}
+        params["blocks"] = {"ln1": jnp.zeros((L, D), dt), "mamba": mam}
+    elif cfg.family == "hybrid":
+        P = L // cfg.attn_period
+        inner = cfg.attn_period
+        n_moe = sum(1 for i in range(inner)
+                    if (i % cfg.moe_period == cfg.moe_period - 1))
+        n_mlp = inner - n_moe
+        base_mamba = mamba_lib.init_mamba_params(jax.random.fold_in(k_blocks, 0), cfg, dt)
+        blocks = {
+            "attn_ln": jnp.zeros((P, D), dt),
+            "attn": _init_group(jax.random.fold_in(k_blocks, 1),
+                                attn_param_shapes(cfg), dt, (P,)),
+            "mamba_ln": jnp.zeros((P, inner - 1, D), dt),
+            "mamba": {k: jnp.broadcast_to(v, (P, inner - 1) + v.shape).copy()
+                      for k, v in base_mamba.items()},
+            "ffn_ln": jnp.zeros((P, inner, D), dt),
+            "mlp": _init_group(jax.random.fold_in(k_blocks, 2),
+                               mlp_param_shapes(cfg), dt, (P, n_mlp)),
+            "moe": _init_group(jax.random.fold_in(k_blocks, 3),
+                               moe_param_shapes(cfg), dt, (P, n_moe)),
+        }
+        params["blocks"] = blocks
+    else:
+        raise ValueError(f"family {cfg.family} not handled here (encdec lives in encdec.py)")
+    return params
+
+
+def param_logical(cfg) -> Dict[str, Any]:
+    """Pytree (matching init_params) of logical-dims tuples."""
+    log: Dict[str, Any] = {
+        "embed": ("vocab", "d_model_w"),
+        "final_norm": (None,),
+    }
+    if not cfg.tie_embeddings:
+        log["unembed"] = ("vocab", "d_model_w")
+    if cfg.family in ("dense", "moe"):
+        blocks = {
+            "ln1": ("stack", None), "ln2": ("stack", None),
+            "attn": _stack_logical(attn_param_logical(cfg), 1),
+        }
+        if cfg.is_moe:
+            blocks["moe"] = _stack_logical(moe_param_logical(cfg), 1)
+        else:
+            blocks["mlp"] = _stack_logical(mlp_param_logical(cfg), 1)
+        log["blocks"] = blocks
+    elif cfg.family == "ssm":
+        log["blocks"] = {
+            "ln1": ("stack", None),
+            "mamba": _stack_logical(mamba_lib.mamba_param_logical(cfg), 1),
+        }
+    elif cfg.family == "hybrid":
+        log["blocks"] = {
+            "attn_ln": ("stack", None),
+            "attn": _stack_logical(attn_param_logical(cfg), 1),
+            "mamba_ln": ("stack", "stack", None),
+            "mamba": _stack_logical(mamba_lib.mamba_param_logical(cfg), 2),
+            "ffn_ln": ("stack", "stack", None),
+            "mlp": _stack_logical(mlp_param_logical(cfg), 2),
+            "moe": _stack_logical(moe_param_logical(cfg), 2),
+        }
+    return log
+
+
+# ---------------------------------------------------------------------------
+# Attention block (shared by forward / prefill / decode)
+# ---------------------------------------------------------------------------
+def _project_qkv(p, x, cfg, positions, ctx):
+    """x: (B,S,D) -> q (B,S,H,hd), k/v (B,S,Hkv,hd) with rope + qk_norm."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if ctx is not None:
+        q = ctx.constrain(q, "batch", "seq", "heads", "head_dim")
+        k = ctx.constrain(k, "batch", "seq", "kv_heads", "head_dim")
+        v = ctx.constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def _layer_window(cfg, layer_idx, seq_len: int):
+    """Per-layer attention window as a traced scalar (or None = full)."""
+    if cfg.local_global_period > 0:
+        is_global = (layer_idx % cfg.local_global_period) == (
+            cfg.local_global_period - 1
+        )
+        return jnp.where(is_global, jnp.int32(2 ** 30), jnp.int32(cfg.window))
+    if cfg.window is not None:
+        return jnp.int32(cfg.window)
+    return None
+
+
+def _attn_block(p, x, cfg, ctx, positions, layer_idx, *, q_chunk, kv_chunk):
+    q, k, v = _project_qkv(p, x, cfg, positions, ctx)
+    window = _layer_window(cfg, layer_idx, x.shape[1])
+    out = chunked_attention(
+        q, k, v, causal=True, window=window,
+        q_chunk=q_chunk, kv_chunk=kv_chunk, ctx=ctx,
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def _ffn(blocks_slice, x, cfg, ctx, use_moe: bool, which: str = "moe"):
+    if use_moe:
+        m = blocks_slice[which]
+        y, aux = moe_block(
+            x, m["router"], m["wi_gate"], m["wi_up"], m["wo"],
+            top_k=cfg.experts_per_token,
+            capacity_factor=cfg.capacity_factor,
+            chunk=cfg.moe_chunk, ctx=ctx,
+        )
+        return y, aux
+    m = blocks_slice["mlp"]
+    return swiglu_mlp(x, m["wi_gate"], m["wi_up"], m["wo"], ctx=ctx), jnp.float32(0)
+
+
+# ---------------------------------------------------------------------------
+# Forward (training)
+# ---------------------------------------------------------------------------
+def forward(
+    params: Dict[str, Any],
+    tokens: Array,                  # (B, S) int32
+    cfg,
+    ctx=None,
+    *,
+    positions: Optional[Array] = None,
+    remat: bool = True,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> Tuple[Array, Array]:
+    """Returns (logits (B,S,V), moe_aux_loss)."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[None], (3, B, S))
+    x = embed(tokens, params["embed"], ctx, scale=_embed_scale(cfg))
+
+    if cfg.family in ("dense", "moe"):
+        def layer(x, xs):
+            blk, idx = xs
+            h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+            x = x + _attn_block(blk["attn"], h, cfg, ctx, positions, idx,
+                                q_chunk=q_chunk, kv_chunk=kv_chunk)
+            h = rms_norm(x, blk["ln2"], cfg.norm_eps)
+            y, aux = _ffn(blk, h, cfg, ctx, cfg.is_moe)
+            x = x + y
+            if ctx is not None:
+                x = ctx.constrain(x, "batch", "res_seq", "d_model")
+            return x, aux
+
+        f = jax.checkpoint(layer) if remat else layer
+        x, auxes = lax.scan(f, x, (params["blocks"], jnp.arange(cfg.n_layers)))
+        aux = auxes.sum()
+    elif cfg.family == "ssm":
+        def layer(x, xs):
+            blk, idx = xs
+            h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+            y, _state = mamba_lib.mamba_forward(blk["mamba"], h, cfg, ctx=ctx)
+            x = x + y
+            if ctx is not None:
+                x = ctx.constrain(x, "batch", "res_seq", "d_model")
+            return x, jnp.float32(0)
+
+        f = jax.checkpoint(layer) if remat else layer
+        x, auxes = lax.scan(f, x, (params["blocks"], jnp.arange(cfg.n_layers)))
+        aux = auxes.sum()
+    elif cfg.family == "hybrid":
+        inner = cfg.attn_period
+
+        def period(x, xs):
+            blk, pidx = xs
+            aux_total = jnp.float32(0)
+            i_mlp = i_moe = 0
+
+            def ckpt(f, *args):
+                # nested remat: one sub-block's internals live at a time
+                # during the period's backward sweep
+                return (jax.checkpoint(f) if remat else f)(*args)
+
+            for i in range(inner):
+                gidx = pidx * inner + i
+                if i == 0:
+                    def attn_sub(x):
+                        h = rms_norm(x, blk["attn_ln"], cfg.norm_eps)
+                        return x + _attn_block(
+                            blk["attn"], h, cfg, ctx, positions, gidx,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+                    x = ckpt(attn_sub, x)
+                else:
+                    mp = {k: v[i - 1] for k, v in blk["mamba"].items()}
+                    ln = blk["mamba_ln"][i - 1]
+
+                    def mamba_sub(x, mp=mp, ln=ln):
+                        h = rms_norm(x, ln, cfg.norm_eps)
+                        y, _ = mamba_lib.mamba_forward(mp, h, cfg, ctx=ctx)
+                        out = x + y
+                        if ctx is not None:
+                            out = ctx.constrain(out, "batch", "res_seq",
+                                                "d_model")
+                        return out
+                    x = ckpt(mamba_sub, x)
+                use_moe = (i % cfg.moe_period) == (cfg.moe_period - 1)
+                ln = blk["ffn_ln"][i]
+                if use_moe:
+                    sub = {"moe": {k: v[i_moe] for k, v in blk["moe"].items()}}
+                    i_moe += 1
+                else:
+                    sub = {"mlp": {k: v[i_mlp] for k, v in blk["mlp"].items()}}
+                    i_mlp += 1
+
+                def ffn_sub(x, sub=sub, ln=ln, use_moe=use_moe):
+                    h = rms_norm(x, ln, cfg.norm_eps)
+                    y, aux = _ffn(sub, h, cfg, ctx, use_moe)
+                    return x + y, aux
+                y_aux = ckpt(ffn_sub, x)
+                x, aux = y_aux
+                aux_total = aux_total + aux
+            if ctx is not None:
+                x = ctx.constrain(x, "batch", "res_seq", "d_model")
+            return x, aux_total
+
+        f = jax.checkpoint(period) if remat else period
+        P = cfg.n_layers // inner
+        x, auxes = lax.scan(f, x, (params["blocks"], jnp.arange(P)))
+        aux = auxes.sum()
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(x, table, ctx)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Cache init / prefill / decode
+# ---------------------------------------------------------------------------
+def _ring_len(cfg, max_len: int) -> int:
+    """All-SWA archs (mixtral) never attend beyond ``window`` — the decode
+    cache is a ring buffer of window slots instead of the full sequence
+    (long_500k: 120 GB -> 0.9 GB of KV; EXPERIMENTS.md §Perf iteration 4)."""
+    if cfg.window is not None and cfg.local_global_period == 0:
+        return min(max_len, cfg.window)
+    return max_len
+
+
+def init_cache(cfg, batch: int, max_len: int, ctx=None) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    Hkv, hd = cfg.padded_kv_heads, cfg.head_dim
+    max_len = _ring_len(cfg, max_len)
+
+    def kv(n_stack):
+        shape = (n_stack, batch, max_len, Hkv, hd)
+        arr = jnp.zeros(shape, dt)
+        if ctx is not None:
+            arr = ctx.constrain(arr, "stack", "batch", "kv_seq", "kv_heads", "head_dim")
+        return arr
+
+    if cfg.family in ("dense", "moe"):
+        return dict(k=kv(cfg.n_layers), v=kv(cfg.n_layers), pos=jnp.int32(0))
+    if cfg.family == "ssm":
+        base = mamba_lib.init_mamba_cache(cfg, batch, dt)
+        return dict(
+            state=jnp.zeros((cfg.n_layers,) + base["state"].shape, jnp.float32),
+            conv=jnp.zeros((cfg.n_layers,) + base["conv"].shape, dt),
+            pos=jnp.int32(0),
+        )
+    if cfg.family == "hybrid":
+        P = cfg.n_layers // cfg.attn_period
+        inner = cfg.attn_period
+        base = mamba_lib.init_mamba_cache(cfg, batch, dt)
+        return dict(
+            k=kv(P), v=kv(P),
+            state=jnp.zeros((P, inner - 1) + base["state"].shape, jnp.float32),
+            conv=jnp.zeros((P, inner - 1) + base["conv"].shape, dt),
+            pos=jnp.int32(0),
+        )
+    raise ValueError(cfg.family)
+
+
+def _fit_cache(x: Array, max_len: int, dtype) -> Array:
+    """Pad (or ring-trim to the last ``max_len`` positions) along axis 1."""
+    S = x.shape[1]
+    if S > max_len:
+        return x[:, S - max_len:].astype(dtype)
+    if S < max_len:
+        x = jnp.pad(x, [(0, 0), (0, max_len - S), (0, 0), (0, 0)])
+    return x.astype(dtype)
+
+
+def prefill(
+    params, tokens: Array, cache: Dict[str, Any], cfg, ctx=None,
+    *, positions: Optional[Array] = None, q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> Tuple[Array, Dict[str, Any]]:
+    """Run the prompt through the model, filling the cache.
+    Returns (logits for the last position (B,V), updated cache)."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[None], (3, B, S))
+    x = embed(tokens, params["embed"], ctx, scale=_embed_scale(cfg))
+
+    if cfg.family in ("dense", "moe"):
+        def layer(x, xs):
+            blk, idx = xs
+            h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+            q, k, v = _project_qkv(blk["attn"], h, cfg, positions, ctx)
+            window = _layer_window(cfg, idx, S)
+            o = chunked_attention(q, k, v, causal=True, window=window,
+                                  q_chunk=q_chunk, kv_chunk=kv_chunk, ctx=ctx)
+            x = x + jnp.einsum("bshk,hkd->bsd", o, blk["attn"]["wo"])
+            h = rms_norm(x, blk["ln2"], cfg.norm_eps)
+            y, _ = _ffn(blk, h, cfg, ctx, cfg.is_moe)
+            x = x + y
+            if ctx is not None:
+                x = ctx.constrain(x, "batch", "res_seq", "d_model")
+            # cache entries padded (or ring-trimmed) to the cache length
+            max_len = cache["k"].shape[2]
+            return x, (_fit_cache(k, max_len, _dtype(cfg)),
+                       _fit_cache(v, max_len, _dtype(cfg)))
+
+        x, (ks, vs) = lax.scan(layer, x, (params["blocks"], jnp.arange(cfg.n_layers)))
+        new_cache = dict(k=ks, v=vs, pos=jnp.int32(S))
+    elif cfg.family == "ssm":
+        def layer(x, xs):
+            blk, idx = xs
+            h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+            y, (state, conv) = mamba_lib.mamba_forward(
+                blk["mamba"], h, cfg, ctx=ctx, return_cache=True
+            )
+            x = x + y
+            if ctx is not None:
+                x = ctx.constrain(x, "batch", "res_seq", "d_model")
+            return x, (state, conv)
+
+        x, (states, convs) = lax.scan(layer, x, (params["blocks"], jnp.arange(cfg.n_layers)))
+        new_cache = dict(state=states, conv=convs.astype(_dtype(cfg)), pos=jnp.int32(S))
+    elif cfg.family == "hybrid":
+        inner = cfg.attn_period
+        max_len = cache["k"].shape[2]
+
+        def period(x, xs):
+            blk, pidx = xs
+            states, convs = [], []
+            k_out = v_out = None
+            i_mlp = i_moe = 0
+            for i in range(inner):
+                gidx = pidx * inner + i
+                if i == 0:
+                    h = rms_norm(x, blk["attn_ln"], cfg.norm_eps)
+                    q, k, v = _project_qkv(blk["attn"], h, cfg, positions, ctx)
+                    window = _layer_window(cfg, gidx, S)
+                    o = chunked_attention(q, k, v, causal=True, window=window,
+                                          q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                          ctx=ctx)
+                    x = x + jnp.einsum("bshk,hkd->bsd", o, blk["attn"]["wo"])
+                    k_out = _fit_cache(k, max_len, _dtype(cfg))
+                    v_out = _fit_cache(v, max_len, _dtype(cfg))
+                else:
+                    h = rms_norm(x, blk["mamba_ln"][i - 1], cfg.norm_eps)
+                    mp = {kk: vv[i - 1] for kk, vv in blk["mamba"].items()}
+                    y, (st, cv) = mamba_lib.mamba_forward(
+                        mp, h, cfg, ctx=ctx, return_cache=True
+                    )
+                    x = x + y
+                    states.append(st)
+                    convs.append(cv)
+                use_moe = (i % cfg.moe_period) == (cfg.moe_period - 1)
+                h = rms_norm(x, blk["ffn_ln"][i], cfg.norm_eps)
+                if use_moe:
+                    sub = {"moe": {kk: vv[i_moe] for kk, vv in blk["moe"].items()}}
+                    y, _ = _ffn(sub, h, cfg, ctx, True)
+                    i_moe += 1
+                else:
+                    sub = {"mlp": {kk: vv[i_mlp] for kk, vv in blk["mlp"].items()}}
+                    y, _ = _ffn(sub, h, cfg, ctx, False)
+                    i_mlp += 1
+                x = x + y
+            if ctx is not None:
+                x = ctx.constrain(x, "batch", "res_seq", "d_model")
+            return x, (k_out, v_out, jnp.stack(states), jnp.stack(convs))
+
+        P = cfg.n_layers // inner
+        x, (ks, vs, states, convs) = lax.scan(
+            period, x, (params["blocks"], jnp.arange(P))
+        )
+        new_cache = dict(k=ks, v=vs, state=states,
+                         conv=convs.astype(_dtype(cfg)), pos=jnp.int32(S))
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(x, table, ctx)[:, 0]
+    return logits, new_cache
+
+
+def decode_step(
+    params, token: Array, cache: Dict[str, Any], cfg, ctx=None,
+    *, positions: Optional[Array] = None,
+) -> Tuple[Array, Dict[str, Any]]:
+    """One token with cache. token: (B,1) -> logits (B,V)."""
+    B = token.shape[0]
+    pos = cache["pos"]
+    if positions is None:
+        positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[None], (3, B, 1))
+    x = embed(token, params["embed"], ctx, scale=_embed_scale(cfg))
+
+    if cfg.family in ("dense", "moe"):
+        def layer(x, xs):
+            blk, k_cache, v_cache, idx = xs
+            h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+            q, k, v = _project_qkv(blk["attn"], h, cfg, positions, ctx)
+            L_cache = k_cache.shape[1]
+            ring = (cfg.window is not None and cfg.local_global_period == 0
+                    and L_cache == cfg.window)
+            slot = pos % L_cache if ring else pos
+            k_cache = lax.dynamic_update_slice(
+                k_cache, k.astype(k_cache.dtype), (0, slot, 0, 0))
+            v_cache = lax.dynamic_update_slice(
+                v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0))
+            if ring:
+                # window is enforced by construction; only startup slots
+                # beyond pos are invalid
+                o = decode_attention(q, k_cache, v_cache,
+                                     jnp.minimum(pos + 1, L_cache), ctx=ctx)
+            else:
+                window = _layer_window(cfg, idx, L_cache)
+                o = decode_attention(q, k_cache, v_cache, pos + 1,
+                                     window=window, ctx=ctx)
+            x = x + jnp.einsum("bshk,hkd->bsd", o, blk["attn"]["wo"])
+            h = rms_norm(x, blk["ln2"], cfg.norm_eps)
+            y, _ = _ffn(blk, h, cfg, ctx, cfg.is_moe)
+            return x + y, (k_cache, v_cache)
+
+        x, (ks, vs) = lax.scan(
+            layer, x,
+            (params["blocks"], cache["k"], cache["v"], jnp.arange(cfg.n_layers)),
+        )
+        new_cache = dict(k=ks, v=vs, pos=pos + 1)
+    elif cfg.family == "ssm":
+        def layer(x, xs):
+            blk, st, cv, idx = xs
+            h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+            y, nc = mamba_lib.mamba_decode(
+                blk["mamba"], h, dict(state=st, conv=cv), cfg
+            )
+            return x + y, (nc["state"], nc["conv"])
+
+        x, (states, convs) = lax.scan(
+            layer, x,
+            (params["blocks"], cache["state"], cache["conv"], jnp.arange(cfg.n_layers)),
+        )
+        new_cache = dict(state=states, conv=convs, pos=pos + 1)
+    elif cfg.family == "hybrid":
+        inner = cfg.attn_period
+
+        def period(x, xs):
+            blk, k_cache, v_cache, sts, cvs, pidx = xs
+            new_sts, new_cvs = [], []
+            i_mlp = i_moe = 0
+            for i in range(inner):
+                gidx = pidx * inner + i
+                if i == 0:
+                    h = rms_norm(x, blk["attn_ln"], cfg.norm_eps)
+                    q, k, v = _project_qkv(blk["attn"], h, cfg, positions, ctx)
+                    k_cache = lax.dynamic_update_slice(
+                        k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
+                    v_cache = lax.dynamic_update_slice(
+                        v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+                    window = _layer_window(cfg, gidx, k_cache.shape[1])
+                    o = decode_attention(q, k_cache, v_cache, pos + 1,
+                                         window=window, ctx=ctx)
+                    x = x + jnp.einsum("bshk,hkd->bsd", o, blk["attn"]["wo"])
+                else:
+                    h = rms_norm(x, blk["mamba_ln"][i - 1], cfg.norm_eps)
+                    mp = {kk: vv[i - 1] for kk, vv in blk["mamba"].items()}
+                    y, nc = mamba_lib.mamba_decode(
+                        mp, h, dict(state=sts[i - 1], conv=cvs[i - 1]), cfg
+                    )
+                    x = x + y
+                    new_sts.append(nc["state"])
+                    new_cvs.append(nc["conv"])
+                use_moe = (i % cfg.moe_period) == (cfg.moe_period - 1)
+                h = rms_norm(x, blk["ffn_ln"][i], cfg.norm_eps)
+                if use_moe:
+                    sub = {"moe": {kk: vv[i_moe] for kk, vv in blk["moe"].items()}}
+                    y, _ = _ffn(sub, h, cfg, ctx, True)
+                    i_moe += 1
+                else:
+                    sub = {"mlp": {kk: vv[i_mlp] for kk, vv in blk["mlp"].items()}}
+                    y, _ = _ffn(sub, h, cfg, ctx, False)
+                    i_mlp += 1
+                x = x + y
+            return x, (k_cache, v_cache, jnp.stack(new_sts), jnp.stack(new_cvs))
+
+        P = cfg.n_layers // inner
+        x, (ks, vs, states, convs) = lax.scan(
+            period, x,
+            (params["blocks"], cache["k"], cache["v"], cache["state"],
+             cache["conv"], jnp.arange(P)),
+        )
+        new_cache = dict(k=ks, v=vs, state=states, conv=convs, pos=pos + 1)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(x, table, ctx)[:, 0]
+    return logits, new_cache

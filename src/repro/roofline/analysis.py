@@ -1,0 +1,250 @@
+"""Roofline terms from a compiled dry-run artifact (no real hardware).
+
+Per (arch x shape x mesh) cell we derive three times-per-step:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs            (197 TF bf16)
+    memory     = HLO_bytes_per_device / HBM_bw                (819 GB/s)
+    collective = collective_bytes_per_device / link_bw        (~50 GB/s ICI)
+
+``cost_analysis()`` already reports per-device FLOPs/bytes on a partitioned
+module.  Collective bytes are parsed from ``compiled.as_text()`` (post-SPMD
+HLO): for every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute we take the per-device buffer size and apply the standard
+ring factors.  Groups that span pods are classified as DCN traffic and
+reported separately (the 'pod' axis crosses the data-center network).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+# TPU v5e-class constants (per assignment)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+DCN_BW = 6.25e9              # B/s / chip across pods (assumed, reported only)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"(?P<var>%\S+)\s*=\s*(?P<shape>\(?[a-z0-9]+\[[^\]]*\][^ ]*\)?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_RG_EXPLICIT_RE = re.compile(r"replica_groups=\{\{(.*?)\}\}")
+_RG_IOTA_RE = re.compile(
+    r"replica_groups=\[(?P<dims>[\d,]+)\]<=\[(?P<reshape>[\d,]+)\]"
+    r"(?:T\((?P<perm>[\d,]+)\))?"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string (sums tuple elements)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _parse_groups(line: str) -> Optional[np.ndarray]:
+    """Replica groups as an array (num_groups, group_size), or None."""
+    m = _RG_IOTA_RE.search(line)
+    if m:
+        dims = [int(x) for x in m.group("dims").split(",")]
+        reshape = [int(x) for x in m.group("reshape").split(",")]
+        ids = np.arange(int(np.prod(reshape)))
+        if len(reshape) > 1:
+            ids = ids.reshape(reshape)
+            if m.group("perm"):
+                perm = [int(x) for x in m.group("perm").split(",")]
+                ids = ids.transpose(perm)
+        return ids.reshape(dims)
+    m = _RG_EXPLICIT_RE.search(line)
+    if m:
+        groups = [
+            [int(x) for x in g.split(",") if x.strip()]
+            for g in m.group(1).split("},{")
+        ]
+        return np.asarray(groups)
+    return None
+
+
+@dataclass
+class CollectiveStats:
+    op: str
+    count: int = 0
+    bytes_moved: int = 0     # per-device, ring-factor applied
+    dcn_bytes: int = 0
+
+
+@dataclass
+class RooflineReport:
+    arch: str = ""
+    shape: str = ""
+    mesh: str = ""
+    chips: int = 256
+    flops_per_device: float = 0.0
+    bytes_per_device: float = 0.0
+    collective_bytes: float = 0.0       # ICI per device
+    dcn_collective_bytes: float = 0.0   # DCN per device
+    collectives: Dict[str, Dict] = field(default_factory=dict)
+    model_flops: float = 0.0            # 6*N*D (or 6*N_active*D)
+    memory_per_device: Optional[Dict] = None
+
+    # -- the three terms (seconds per step) --------------------------------
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW + self.dcn_collective_bytes / DCN_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = dict(compute=self.t_compute, memory=self.t_memory,
+                     collective=self.t_collective)
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        """max of the three terms (perfect overlap assumption)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips): <1 means pad/redundant work,
+        >1 means e.g. remat did NOT inflate HLO (HLO counts the backward)."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline-implied step time."""
+        t = self.step_time_lower_bound
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    def to_dict(self) -> Dict:
+        return dict(
+            arch=self.arch, shape=self.shape, mesh=self.mesh, chips=self.chips,
+            flops_per_device=self.flops_per_device,
+            bytes_per_device=self.bytes_per_device,
+            collective_bytes=self.collective_bytes,
+            dcn_collective_bytes=self.dcn_collective_bytes,
+            t_compute=self.t_compute, t_memory=self.t_memory,
+            t_collective=self.t_collective, bottleneck=self.bottleneck,
+            model_flops=self.model_flops,
+            useful_flops_ratio=self.useful_flops_ratio,
+            mfu=self.mfu,
+            collectives=self.collectives,
+            memory_per_device=self.memory_per_device,
+        )
+
+
+def parse_collectives(hlo_text: str, devices_per_pod: int) -> Dict[str, CollectiveStats]:
+    """Scan post-SPMD HLO for collectives; returns stats per op kind.
+
+    Bytes are per-participating-device with ring factors:
+      all-gather:      out * (g-1)/g
+      reduce-scatter:  in  * (g-1)/g ≈ out * (g-1)
+      all-reduce:      buf * 2(g-1)/g
+      all-to-all:      buf * (g-1)/g
+      collective-permute: buf
+    """
+    stats: Dict[str, CollectiveStats] = {}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if f"{op}-done" in line:
+            continue
+        nbytes = _shape_bytes(m.group("shape"))
+        groups = _parse_groups(line)
+        g = int(groups.shape[-1]) if groups is not None else 1
+        if op == "all-gather":
+            moved = nbytes * (g - 1) / max(g, 1)
+        elif op == "reduce-scatter":
+            moved = nbytes * (g - 1)           # nbytes is the (small) output
+        elif op == "all-reduce":
+            moved = nbytes * 2 * (g - 1) / max(g, 1)
+        elif op == "all-to-all":
+            moved = nbytes * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            moved = nbytes
+        is_dcn = False
+        if groups is not None and devices_per_pod > 0:
+            pods = groups // devices_per_pod
+            is_dcn = bool((pods != pods[..., :1]).any())
+        s = stats.setdefault(op, CollectiveStats(op))
+        s.count += 1
+        if is_dcn:
+            s.dcn_bytes += int(moved)
+        else:
+            s.bytes_moved += int(moved)
+    return stats
+
+
+def analyze_compiled(
+    compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
+    devices_per_pod: int, model_flops: float,
+) -> RooflineReport:
+    ca = compiled.cost_analysis() or {}
+    rep = RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=float(ca.get("flops", 0.0)),
+        bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+        model_flops=model_flops,
+    )
+    stats = parse_collectives(compiled.as_text(), devices_per_pod)
+    rep.collective_bytes = float(sum(s.bytes_moved for s in stats.values()))
+    rep.dcn_collective_bytes = float(sum(s.dcn_bytes for s in stats.values()))
+    rep.collectives = {
+        k: dict(count=v.count, ici_bytes=v.bytes_moved, dcn_bytes=v.dcn_bytes)
+        for k, v in stats.items()
+    }
+    try:
+        ma = compiled.memory_analysis()
+        rep.memory_per_device = dict(
+            argument=int(ma.argument_size_in_bytes),
+            output=int(ma.output_size_in_bytes),
+            temp=int(ma.temp_size_in_bytes),
+            peak_estimate=int(ma.argument_size_in_bytes + ma.temp_size_in_bytes),
+        )
+    except Exception:
+        rep.memory_per_device = None
+    return rep
+
+
+def model_flops_for(cfg, shape, kind: str) -> float:
+    """MODEL_FLOPS per step: 6*N*D train, 2*N*D forward-only (N=active)."""
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,81 @@
+"""Render EXPERIMENTS.md tables from dry-run JSON artifacts.
+
+    PYTHONPATH=src python -m repro.roofline.report_md reports/dryrun.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List, Optional
+
+
+def _fmt_cell(r: Dict) -> List[str]:
+    mem = r.get("memory_per_device") or {}
+    peak = (mem.get("argument", 0) + mem.get("temp", 0)) / 2**30
+    return [
+        r["arch"], r["shape"], r["mesh"],
+        f"{r['t_compute']*1e3:.1f}", f"{r['t_memory']*1e3:.1f}",
+        f"{r['t_collective']*1e3:.1f}", r["bottleneck"],
+        f"{r['mfu']:.3f}", f"{r['useful_flops_ratio']:.2f}",
+        f"{peak:.1f}",
+    ]
+
+
+HEADER = ["arch", "shape", "mesh", "t_comp ms", "t_mem ms", "t_coll ms",
+          "bottleneck", "MFU bound", "useful/HLO", "peak GiB/dev"]
+
+
+def table(cells: List[Dict], mesh: Optional[str] = None) -> str:
+    rows = [HEADER, ["---"] * len(HEADER)]
+    for r in sorted(cells, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        if r.get("status") != "ok":
+            rows.append([r["arch"], r["shape"], r["mesh"], "ERROR"] +
+                        [""] * (len(HEADER) - 4))
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        rows.append(_fmt_cell(r))
+    return "\n".join("| " + " | ".join(row) + " |" for row in rows)
+
+
+def compare(baseline: List[Dict], optimized: List[Dict]) -> str:
+    """Before/after table for cells present in both files."""
+    key = lambda r: (r["arch"], r["shape"], r["mesh"])
+    base = {key(r): r for r in baseline if r.get("status") == "ok"}
+    rows = [["arch", "shape", "mesh", "term", "before", "after", "delta"],
+            ["---"] * 7]
+    for r in optimized:
+        if r.get("status") != "ok" or key(r) not in base:
+            continue
+        b = base[key(r)]
+        for term, label, scale in (
+            ("t_compute", "compute ms", 1e3),
+            ("t_memory", "memory ms", 1e3),
+            ("t_collective", "collective ms", 1e3),
+        ):
+            before, after = b[term] * scale, r[term] * scale
+            delta = (after - before) / before * 100 if before else 0.0
+            rows.append([r["arch"], r["shape"], r["mesh"], label,
+                         f"{before:.1f}", f"{after:.1f}", f"{delta:+.0f}%"])
+        bm = b.get("memory_per_device") or {}
+        om = r.get("memory_per_device") or {}
+        bp = (bm.get("argument", 0) + bm.get("temp", 0)) / 2**30
+        op = (om.get("argument", 0) + om.get("temp", 0)) / 2**30
+        rows.append([r["arch"], r["shape"], r["mesh"], "peak GiB",
+                     f"{bp:.1f}", f"{op:.1f}",
+                     f"{(op-bp)/bp*100:+.0f}%" if bp else ""])
+    return "\n".join("| " + " | ".join(row) + " |" for row in rows)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "reports/dryrun.json"
+    cells = json.load(open(path))
+    if len(sys.argv) > 2:
+        opt = json.load(open(sys.argv[2]))
+        print(compare(cells, opt))
+    else:
+        print(table(cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,178 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Model code names tensor dimensions with *logical* axes ("batch", "d_ff",
+"heads", ...).  A :class:`ShardingCtx` resolves logical axes to mesh axes via
+a rules table, dropping any assignment whose mesh-axis product does not
+evenly divide the dimension (JAX requires even sharding at jit boundaries).
+
+Default physical mapping (see DESIGN.md §3):
+
+* ``batch``   -> ("pod", "data")   — DP, hierarchical across pods
+* ``d_ff`` / ``vocab`` / ``heads`` / ``expert_ff`` -> "model"  — TP
+* ``d_model`` (weight dim) -> "data" — FSDP/ZeRO weight+optimizer sharding
+* ``seq``     -> None by default; "model" when sequence-parallel (SP) is on
+* ``kv_seq``  -> "model" for long-context decode
+
+Every rule is checked against the actual dim size; a non-divisible
+assignment falls back to ``None`` (replicated) for that dim.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisAssignment = Union[None, str, Tuple[str, ...]]
+
+DEFAULT_RULES: Dict[str, AxisAssignment] = {
+    "batch": ("pod", "data"),
+    "seq": None,              # attention-internal seq dim
+    "res_seq": None,          # residual-stream seq dim; "model" = sequence parallel
+    "kv_seq": None,           # "model" for long-context decode cells
+    "d_model": None,          # activations: replicated feature dim
+    "d_model_w": "data",      # weights: FSDP dim
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "d_ff": "model",
+    "vocab": "model",
+    "experts": None,
+    # MoE token groups carry the batch partitioning after the
+    # (B,S,D)->(G,chunk,D) reshape.  NOT "model": the model axis must stay
+    # on d_ff inside the expert matmuls — claiming it for G forces GSPMD to
+    # all-gather full fp32 expert weights per layer (3 GiB each on mixtral).
+    "moe_groups": ("pod", "data"),
+    "conv_w": None,
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "d_inner": "model",
+    "stack": None,            # scan-over-layers leading dim
+    "enc_seq": None,
+}
+
+
+# logical dims whose failed mesh assignment re-routes onto head_dim
+FALLBACK_TO_HEAD_DIM = ("heads", "kv_heads", "ssm_heads")
+
+
+@dataclass(frozen=True)
+class ShardingCtx:
+    """Resolves logical specs against a mesh; no-op when mesh is None."""
+
+    mesh: Optional[Mesh] = None
+    rules: Dict[str, AxisAssignment] = field(default_factory=lambda: dict(DEFAULT_RULES))
+    head_dim_fallback: bool = True
+
+    def with_rules(self, **updates: AxisAssignment) -> "ShardingCtx":
+        rules = dict(self.rules)
+        rules.update(updates)
+        return replace(self, rules=rules)
+
+    # -- resolution ---------------------------------------------------------
+    def _axis_size(self, axes: AxisAssignment) -> int:
+        if axes is None or self.mesh is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        size = 1
+        for a in axes:
+            size *= self.mesh.shape.get(a, 1)
+        return size
+
+    def _present(self, axes: AxisAssignment) -> AxisAssignment:
+        """Drop mesh axes that don't exist in this mesh (e.g. 'pod' on the
+        single-pod mesh)."""
+        if axes is None or self.mesh is None:
+            return None
+        if isinstance(axes, str):
+            return axes if axes in self.mesh.shape else None
+        kept = tuple(a for a in axes if a in self.mesh.shape)
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+
+    def spec(self, logical: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for dims named by ``logical`` (None = replicated).
+
+        If ``shape`` is given, any assignment that does not divide the dim
+        evenly is dropped — and, for head dims, *re-routed*: an arch with
+        28/40/56/8 q-heads cannot shard heads 16-way, so the same mesh axes
+        fall back onto ``head_dim`` (128/256 always divides).  Contracting
+        over a sharded head_dim costs a partial-sum all-reduce but keeps
+        attention compute and weights 16-way parallel (see EXPERIMENTS.md
+        §Perf iteration 3)."""
+        parts = []
+        used: set = set()
+        failed_axes: Dict[str, AxisAssignment] = {}
+        for i, name in enumerate(logical):
+            axes = self._present(self.rules.get(name)) if name else None
+            if axes is not None:
+                flat = (axes,) if isinstance(axes, str) else axes
+                if any(a in used for a in flat):
+                    axes = None  # a mesh axis may appear only once per spec
+            if axes is not None and shape is not None:
+                if shape[i] % self._axis_size(axes) != 0:
+                    if name in FALLBACK_TO_HEAD_DIM:
+                        failed_axes["head_dim"] = axes
+                    axes = None
+            if axes is not None:
+                flat = (axes,) if isinstance(axes, str) else axes
+                used.update(flat)
+            parts.append(axes)
+        if failed_axes and self.head_dim_fallback and shape is not None:
+            for i, name in enumerate(logical):
+                axes = failed_axes.get(name if name == "head_dim" else "")
+                if (name == "head_dim" and parts[i] is None
+                        and "head_dim" in failed_axes):
+                    axes = failed_axes["head_dim"]
+                    flat = (axes,) if isinstance(axes, str) else axes
+                    if (not any(a in used for a in flat)
+                            and shape[i] % self._axis_size(axes) == 0):
+                        parts[i] = axes
+                        used.update(flat)
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def sharding(self, logical: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical, shape))
+
+    # -- constraint ----------------------------------------------------------
+    def constrain(self, x, *logical: Optional[str]):
+        """with_sharding_constraint against the resolved spec (no-op if no
+        mesh)."""
+        if self.mesh is None:
+            return x
+        sh = NamedSharding(self.mesh, self.spec(logical, x.shape))
+        return jax.lax.with_sharding_constraint(x, sh)
+
+    # -- dp axes helpers -------------------------------------------------------
+    @property
+    def n_data(self) -> int:
+        return self._axis_size(self._present(self.rules.get("batch")))
+
+    @property
+    def n_model(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape.get("model", 1)
+
+
+def tree_shardings(ctx: ShardingCtx, tree_logical: Any, tree_shapes: Any):
+    """Map a pytree of logical-dims tuples + a matching pytree of shapes to a
+    pytree of NamedShardings (or None without a mesh)."""
+    return jax.tree.map(
+        lambda logical, shape: ctx.sharding(logical, shape),
+        tree_logical,
+        tree_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )

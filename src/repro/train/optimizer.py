@@ -1,0 +1,140 @@
+"""Adam(W) with selectable optimizer-state precision.
+
+``state_dtype``:
+* ``float32`` — standard.
+* ``bfloat16`` — halves optimizer HBM.
+* ``int8``     — blockwise-quantized m/v (absmax per 256-elem block, fp32
+  scales): ~3.6x smaller than fp32 states.  This is what lets the 398B-param
+  Jamba train on a single 256-chip pod (see DESIGN.md §3) and is the same
+  transform the burst-buffer checkpointer and the Pallas quantize kernel use.
+
+All update math runs in fp32 regardless of storage precision.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+QBLOCK = 256
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    state_dtype: str = "float32"   # float32 | bfloat16 | int8
+    grad_clip: float = 1.0
+
+
+# ---------------------------------------------------------------------------
+# blockwise int8 <-> fp32 (jnp; mirrors kernels/quantize and checkpoint.py)
+#
+# Blocks run along the LAST axis only: (..., D) -> q (..., D/256, 256),
+# s (..., D/256, 1).  This is sharding-preserving — the leading dims keep
+# the parameter's partitioning, so a 348B-param MoE stack never gets
+# gathered just to update its optimizer state.  (A flatten-based layout
+# collapses sharded dims and forces GSPMD to replicate: the dry-run showed
+# 3.2 TiB/device for jamba train before this fix — see EXPERIMENTS.md §Perf.)
+# ---------------------------------------------------------------------------
+def quantizable(shape) -> bool:
+    if not shape:
+        return False
+    n = 1
+    for d in shape:
+        n *= d
+    return shape[-1] % QBLOCK == 0 and n >= 4096
+
+
+def _q8(x: Array) -> Dict[str, Array]:
+    lead, last = x.shape[:-1], x.shape[-1]
+    blocks = x.astype(jnp.float32).reshape(*lead, last // QBLOCK, QBLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return dict(q=q, s=scale)
+
+
+def _dq8(qs: Dict[str, Array], shape) -> Array:
+    blocks = qs["q"].astype(jnp.float32) * qs["s"]
+    return blocks.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# init / update
+# ---------------------------------------------------------------------------
+def init_opt_state(params: Any, cfg: OptConfig) -> Any:
+    def leaf(p):
+        if cfg.state_dtype == "int8" and quantizable(p.shape):
+            z = jnp.zeros(p.shape, jnp.float32)
+            return dict(m=_q8(z), v=_q8(z))
+        dt = (jnp.dtype("float32") if cfg.state_dtype == "int8"
+              else jnp.dtype(cfg.state_dtype))
+        return dict(m=jnp.zeros(p.shape, dt), v=jnp.zeros(p.shape, dt))
+
+    return jax.tree.map(leaf, params)
+
+
+def global_norm(tree: Any) -> Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adam_update(
+    grads: Any, opt_state: Any, params: Any, step: Array, cfg: OptConfig
+) -> Tuple[Any, Any]:
+    """One AdamW step; returns (new_params, new_opt_state)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip else 1.0
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def leaf(g, s, p):
+        gf = g.astype(jnp.float32) * clip
+        q8 = cfg.state_dtype == "int8" and quantizable(p.shape)
+        if q8:
+            m = _dq8(s["m"], p.shape)
+            v = _dq8(s["v"], p.shape)
+        else:
+            m = s["m"].astype(jnp.float32)
+            v = s["v"].astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * gf
+        v = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if cfg.weight_decay:
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - cfg.lr * update).astype(p.dtype)
+        if q8:
+            new_s = dict(m=_q8(m), v=_q8(v))
+        else:
+            dt = (jnp.dtype("float32") if cfg.state_dtype == "int8"
+                  else jnp.dtype(cfg.state_dtype))
+            new_s = dict(m=m.astype(dt), v=v.astype(dt))
+        return new_p, new_s
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(opt_state)
+    # Chain leaf updates through optimization_barrier: without an ordering
+    # edge XLA is free to materialize every leaf's fp32 m/v/update buffers
+    # simultaneously (~5 fp32 copies of the full model at peak).  The chain
+    # caps transient memory at one leaf's working set.
+    out = []
+    token = None
+    for g, s, p in zip(flat_g, flat_s, flat_p):
+        if token is not None:
+            g, _ = jax.lax.optimization_barrier((g, token))
+        new_p, new_s = leaf(g, s, p)
+        token = new_p
+        out.append((new_p, new_s))
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_state = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return new_params, new_state

@@ -1,0 +1,32 @@
+"""Shared fixtures. NOTE: device count stays 1 here by design — only the
+dry-run sets xla_force_host_platform_device_count (see launch/dryrun.py).
+Multi-device tests run in subprocesses (see test_distributed.py)."""
+import sys
+import tempfile
+
+import pytest
+
+sys.path.insert(0, "src")
+
+
+@pytest.fixture()
+def tmp_storage():
+    from repro.core.storage import NativeStorage
+
+    with tempfile.TemporaryDirectory() as d:
+        yield NativeStorage(d)
+
+
+@pytest.fixture()
+def fast_slow_storage():
+    """(fast, slow) simulated tiers for burst-buffer tests.
+
+    time_scale=4 slows the modelled devices so simulated I/O time dominates
+    the checkpoint serializer's real CPU cost (~13 ms/MB on this 1-core
+    box) — keeps the blocked-time ratios deterministic."""
+    from repro.core.storage import SimulatedStorage, TIERS
+
+    with tempfile.TemporaryDirectory() as d1, tempfile.TemporaryDirectory() as d2:
+        fast = SimulatedStorage(d1, TIERS["optane"], time_scale=4.0)
+        slow = SimulatedStorage(d2, TIERS["hdd"], time_scale=4.0)
+        yield fast, slow

@@ -1,0 +1,109 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.quantize import BLOCK, dequantize_blocks, quantize_blocks
+
+
+class TestQuantizeKernel:
+    @pytest.mark.parametrize("n", [1, 7, 256, 300])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, n, dtype):
+        x = (jax.random.normal(jax.random.PRNGKey(n), (n, BLOCK)) * 5).astype(dtype)
+        q, s = quantize_blocks(x)
+        qr, sr = ref.quantize_blocks_ref(x)
+        # last-ulp division differences (compiled vs interpret) may flip a
+        # value sitting exactly on a rounding boundary by 1 level
+        dq = np.abs(np.asarray(q, np.int32) - np.asarray(qr, np.int32))
+        assert dq.max() <= 1
+        assert (dq > 0).mean() < 1e-3
+        np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-5)
+        back = dequantize_blocks(q, s)
+        br = ref.dequantize_blocks_ref(qr, sr)
+        np.testing.assert_allclose(np.asarray(back), np.asarray(br),
+                                   rtol=1e-5, atol=float(np.asarray(s).max()))
+
+    def test_zero_block_scale_is_one(self):
+        x = jnp.zeros((4, BLOCK))
+        q, s = quantize_blocks(x)
+        assert (np.asarray(s) == 1.0).all()
+        assert (np.asarray(q) == 0).all()
+
+    @given(st.integers(0, 10_000), st.floats(0.01, 1e4))
+    @settings(max_examples=20, deadline=None)
+    def test_property_roundtrip_bound(self, seed, scale):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (31,)) * scale
+        q, s = ops.quantize(x)
+        back = ops.dequantize(q, s, x.shape)
+        bound = np.abs(np.asarray(x)).max() / 127.0 * 0.5 + 1e-9
+        assert np.abs(np.asarray(back) - np.asarray(x)).max() <= bound * 1.01
+
+    def test_any_shape_wrapper(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (3, 5, 7))
+        q, s = ops.quantize(x)
+        back = ops.dequantize(q, s, x.shape)
+        assert back.shape == x.shape
+
+
+class TestPreprocessKernel:
+    @pytest.mark.parametrize("hw", [(8, 8), (17, 23), (64, 48)])
+    @pytest.mark.parametrize("c", [1, 3])
+    def test_matches_ref(self, hw, c):
+        h, w = hw
+        img = jax.random.randint(jax.random.PRNGKey(0), (2, h, w, c), 0, 256,
+                                 dtype=jnp.uint8)
+        mean = jnp.linspace(0.3, 0.6, c)
+        std = jnp.linspace(0.2, 0.3, c)
+        out = ops.normalize_images_nhwc(img, mean, std)
+        xc = jnp.transpose(img, (0, 3, 1, 2)).reshape(2, c, h * w)
+        r = ref.normalize_images_ref(xc, mean, std)
+        r = jnp.transpose(r.reshape(2, c, h, w), (0, 2, 3, 1))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(r),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize("sq,skv,bq,bk", [
+        (128, 128, 64, 64), (256, 256, 128, 64), (64, 64, 64, 64),
+    ])
+    @pytest.mark.parametrize("hd", [32, 64])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_ref(self, sq, skv, bq, bk, hd, causal):
+        key = jax.random.PRNGKey(hd + sq)
+        kq, kk, kv_ = jax.random.split(key, 3)
+        q = jax.random.normal(kq, (2, sq, 4, hd), jnp.float32)
+        k = jax.random.normal(kk, (2, skv, 2, hd), jnp.float32)
+        v = jax.random.normal(kv_, (2, skv, 2, hd), jnp.float32)
+        o = ops.flash_attention_bhsd(q, k, v, causal=causal, bq=bq, bk=bk)
+        kb = jnp.repeat(k, 2, axis=2)
+        vb = jnp.repeat(v, 2, axis=2)
+        qf = q.transpose(0, 2, 1, 3).reshape(8, sq, hd)
+        kf = kb.transpose(0, 2, 1, 3).reshape(8, skv, hd)
+        vf = vb.transpose(0, 2, 1, 3).reshape(8, skv, hd)
+        orf = ref.attention_ref(qf, kf, vf, causal=causal)
+        orf = orf.reshape(2, 4, sq, hd).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(orf),
+                                   atol=3e-5, rtol=1e-3)
+
+    def test_bf16_io(self):
+        q = jax.random.normal(jax.random.PRNGKey(0), (1, 64, 2, 32), jnp.bfloat16)
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 2, 32), jnp.bfloat16)
+        v = jax.random.normal(jax.random.PRNGKey(2), (1, 64, 2, 32), jnp.bfloat16)
+        o = ops.flash_attention_bhsd(q, k, v, bq=64, bk=64)
+        assert o.dtype == jnp.bfloat16
+        assert np.isfinite(np.asarray(o, np.float32)).all()
+
+    def test_agrees_with_model_chunked_attention(self):
+        from repro.models.layers import chunked_attention
+
+        q = jax.random.normal(jax.random.PRNGKey(3), (2, 128, 4, 32))
+        k = jax.random.normal(jax.random.PRNGKey(4), (2, 128, 2, 32))
+        v = jax.random.normal(jax.random.PRNGKey(5), (2, 128, 2, 32))
+        o_kernel = ops.flash_attention_bhsd(q, k, v, bq=64, bk=64)
+        o_model = chunked_attention(q, k, v, causal=True, q_chunk=64, kv_chunk=64)
+        np.testing.assert_allclose(np.asarray(o_kernel), np.asarray(o_model),
+                                   atol=3e-5, rtol=1e-3)

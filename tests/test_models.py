@@ -1,0 +1,124 @@
+"""Per-arch smoke tests: reduced config, forward + train step on CPU,
+shape + finiteness + params-updated assertions (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, runnable_cells
+from repro.models.registry import model_fns
+from repro.train import steps as S
+from repro.train.optimizer import OptConfig
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _batch_for(cfg, rng, B=2, S_len=16):
+    tokens = jax.random.randint(rng, (B, S_len + 1), 0, cfg.padded_vocab,
+                                dtype=jnp.int32)
+    batch = {"tokens": tokens}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            rng, (B, 8, cfg.smoke().d_model), jnp.float32).astype(jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+class TestArchSmoke:
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = ARCHS[arch].smoke()
+        fns = model_fns(cfg)
+        params = fns.init_params(jax.random.PRNGKey(0), cfg)
+        B, L = 2, 16
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (B, L), 0,
+                                    cfg.padded_vocab, dtype=jnp.int32)
+        if fns.is_encdec:
+            frames = jax.random.normal(jax.random.PRNGKey(2), (B, 8, cfg.d_model))
+            logits, aux = fns.forward(params, frames.astype(jnp.bfloat16),
+                                      tokens, cfg, remat=False)
+        else:
+            logits, aux = fns.forward(params, tokens, cfg, remat=False)
+        assert logits.shape == (B, L, cfg.padded_vocab)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        assert np.isfinite(float(aux))
+
+    def test_train_step_updates_params(self, arch):
+        cfg = ARCHS[arch].smoke()
+        opt = OptConfig(lr=1e-2)
+        state = S.init_train_state(jax.random.PRNGKey(0), cfg, opt)
+        step = jax.jit(S.make_train_step(cfg, opt, None, remat=False,
+                                         q_chunk=16, kv_chunk=16))
+        batch = _batch_for(cfg, jax.random.PRNGKey(1))
+        new_state, metrics = step(state, batch)
+        assert np.isfinite(metrics["loss"])
+        assert int(new_state["step"]) == 1
+        # at least the embedding moved
+        before = np.asarray(state["params"]["embed"], np.float32)
+        after = np.asarray(new_state["params"]["embed"], np.float32)
+        assert not np.array_equal(before, after)
+        # loss decreases over a few steps on a repeated batch
+        st = new_state
+        first = metrics["loss"]
+        for _ in range(3):
+            st, metrics = step(st, batch)
+        assert metrics["loss"] < first
+
+    def test_prefill_decode_consistency(self, arch):
+        cfg = ARCHS[arch].smoke()
+        fns = model_fns(cfg)
+        params = fns.init_params(jax.random.PRNGKey(0), cfg)
+        B, L = 1, 12
+        tokens = jax.random.randint(jax.random.PRNGKey(3), (B, L), 0,
+                                    cfg.padded_vocab, dtype=jnp.int32)
+        if fns.is_encdec:
+            frames = jax.random.normal(
+                jax.random.PRNGKey(4), (B, 8, cfg.d_model)).astype(jnp.bfloat16)
+            cache = fns.init_cache(cfg, B, L, 8)
+            lg, cache = fns.prefill(params, frames, tokens[:, :-1], cache, cfg)
+            full, _ = fns.forward(params, frames, tokens, cfg, remat=False)
+            lg2, _ = fns.decode_step(params, tokens[:, -1:], cache, cfg)
+        else:
+            cache = fns.init_cache(cfg, B, L)
+            lg, cache = fns.prefill(params, tokens[:, :-1], cache, cfg)
+            full, _ = fns.forward(params, tokens, cfg, remat=False)
+            lg2, _ = fns.decode_step(params, tokens[:, -1:], cache, cfg)
+        ref = np.asarray(full[:, -1], np.float32)
+        got = np.asarray(lg2, np.float32)
+        scale = max(np.abs(ref).max(), 1.0)
+        assert np.abs(got - ref).max() / scale < 0.05, (
+            f"{arch}: decode diverges from forward"
+        )
+
+
+class TestSkipRules:
+    def test_long_500k_only_for_sub_quadratic(self):
+        expect_runs = {"mixtral-8x22b", "gemma3-4b", "mamba2-2.7b",
+                       "jamba-1.5-large-398b"}
+        for arch, cfg in ARCHS.items():
+            cells = runnable_cells(cfg)
+            if arch in expect_runs:
+                assert "long_500k" in cells, arch
+            else:
+                assert "long_500k" not in cells, arch
+            assert {"train_4k", "prefill_32k", "decode_32k"} <= set(cells)
+
+    def test_cell_count_is_34(self):
+        total = sum(len(runnable_cells(c)) for c in ARCHS.values())
+        assert total == 34  # 40 assigned minus 6 documented long_500k skips
+
+
+class TestAlexNet:
+    def test_loss_decreases(self):
+        from repro.configs import ALEXNET_SMOKE as cfg
+        from repro.models import alexnet as A
+
+        params = A.init_params(jax.random.PRNGKey(0), cfg)
+        imgs = jax.random.normal(jax.random.PRNGKey(1),
+                                 (4, cfg.in_hw, cfg.in_hw, cfg.channels))
+        labels = jnp.array([0, 1, 2, 3])
+        loss_grad = jax.jit(jax.value_and_grad(
+            lambda p: A.loss_fn(p, imgs, labels, cfg)))
+        l0, g = loss_grad(params)
+        params2 = jax.tree.map(lambda p, gg: p - 0.01 * gg, params, g)
+        l1, _ = loss_grad(params2)
+        assert np.isfinite(l0) and l1 < l0

@@ -1,0 +1,88 @@
+"""Record container + image codec: unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import records
+
+
+class TestRecordContainer:
+    def test_roundtrip_single(self):
+        payload = b"hello world" * 100
+        blob = records.encode_record(payload)
+        assert records.decode_single_record(blob) == payload
+
+    def test_roundtrip_multi(self):
+        payloads = [b"a" * i for i in range(0, 50, 7)]
+        blob = b"".join(records.encode_record(p) for p in payloads)
+        assert list(records.decode_records(blob)) == payloads
+
+    def test_corrupt_payload_raises(self):
+        blob = bytearray(records.encode_record(b"x" * 100))
+        blob[20] ^= 0xFF  # flip a payload byte
+        with pytest.raises(records.RecordError):
+            list(records.decode_records(bytes(blob)))
+
+    def test_truncated_raises(self):
+        blob = records.encode_record(b"x" * 100)
+        with pytest.raises(records.RecordError):
+            list(records.decode_records(blob[:-3]))
+
+    @given(st.lists(st.binary(min_size=0, max_size=500), max_size=8))
+    @settings(max_examples=50, deadline=None)
+    def test_property_roundtrip(self, payloads):
+        blob = b"".join(records.encode_record(p) for p in payloads)
+        assert list(records.decode_records(blob)) == payloads
+
+
+class TestImageCodec:
+    @given(
+        h=st.integers(1, 40), w=st.integers(1, 40), c=st.sampled_from([1, 3, 4])
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_property_image_roundtrip(self, h, w, c):
+        rng = np.random.default_rng(0)
+        img = rng.integers(0, 256, (h, w, c), dtype=np.uint8)
+        out = records.decode_image(records.encode_image(img))
+        np.testing.assert_array_equal(out, img)
+
+    def test_bad_magic_raises(self):
+        img = np.zeros((4, 4, 3), np.uint8)
+        payload = bytearray(records.encode_image(img))
+        payload[0] = ord(b"X")
+        with pytest.raises(records.RecordError):
+            records.decode_image(bytes(payload))
+
+    def test_resize_identity(self):
+        img = np.random.default_rng(0).random((16, 16, 3)).astype(np.float32)
+        np.testing.assert_array_equal(records.resize_image(img, 16, 16), img)
+
+    def test_resize_bilinear_constant(self):
+        img = np.full((10, 12, 3), 7.0, np.float32)
+        out = records.resize_image(img, 5, 20)
+        assert out.shape == (5, 20, 3)
+        np.testing.assert_allclose(out, 7.0, rtol=1e-6)
+
+    def test_preprocess_dtype_and_range(self):
+        img = np.random.default_rng(0).integers(0, 256, (30, 20, 3), dtype=np.uint8)
+        out = records.preprocess_image(
+            records.encode_image(img), 24, 24)
+        assert out.dtype == np.float32 and out.shape == (24, 24, 3)
+        assert out.min() >= 0.0 and out.max() <= 1.0
+
+
+class TestWriters:
+    def test_image_dataset_writer(self, tmp_storage):
+        paths, labels = records.write_image_dataset(
+            tmp_storage, 10, mean_hw=(16, 16), n_classes=5)
+        assert len(paths) == len(labels) == 10
+        img = records.preprocess_image(
+            records.decode_single_record(tmp_storage.read_file(paths[0])), 8, 8)
+        assert img.shape == (8, 8, 3)
+        assert all(0 <= l < 5 for l in labels)
+
+    def test_token_dataset_writer(self, tmp_storage):
+        paths = records.write_token_dataset(tmp_storage, 3, 4, 32, 1000)
+        shard = records.decode_token_shard(tmp_storage.read_file(paths[0]), 32)
+        assert shard.shape == (4, 32)
+        assert shard.min() >= 0 and shard.max() < 1000

@@ -1,0 +1,111 @@
+"""Sharding rules: divisibility invariant (property test) + resolution."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sharding.rules import DEFAULT_RULES, ShardingCtx
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape is consulted by ShardingCtx."""
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def ctx(shape={"pod": 2, "data": 16, "model": 16}):
+    return ShardingCtx(mesh=FakeMesh(shape))
+
+
+class TestSpecResolution:
+    def test_no_mesh_is_noop(self):
+        c = ShardingCtx(mesh=None)
+        assert c.sharding(("batch", "d_ff"), (4, 4)) is None
+        assert c.constrain("passthrough", "batch") == "passthrough"
+
+    def test_basic_mapping(self):
+        spec = ctx().spec(("batch", None, "d_ff"), (64, 7, 160))
+        assert spec[0] == ("pod", "data")
+        assert spec[2] == "model"
+
+    def test_divisibility_fallback(self):
+        # 28 heads on a 16-way model axis -> replicated
+        spec = ctx().spec(("batch", "seq", "heads", "head_dim"),
+                          (64, 128, 28, 128))
+        assert len(spec) < 3 or spec[2] is None
+
+    def test_missing_axis_dropped(self):
+        # single-pod mesh has no 'pod' axis
+        c = ctx({"data": 16, "model": 16})
+        spec = c.spec(("batch",), (32,))
+        assert spec[0] == "data"
+
+    def test_axis_used_once(self):
+        # both dims want 'model': the second one must be dropped
+        c = ctx().with_rules(seq="model")
+        spec = c.spec(("seq", "d_ff"), (32, 32))
+        assert spec[0] == "model"
+        assert len(spec) < 2 or spec[1] is None
+
+    def test_with_rules_override(self):
+        c = ctx().with_rules(res_seq="model")
+        spec = c.spec(("batch", "res_seq", None), (64, 64, 8))
+        assert spec[1] == "model"
+
+    @given(
+        dim=st.integers(1, 4096),
+        logical=st.sampled_from(list(DEFAULT_RULES)),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_property_every_assignment_divides(self, dim, logical):
+        c = ctx()
+        spec = c.spec((logical,), (dim,))
+        if len(spec) and spec[0] is not None:
+            axes = (spec[0],) if isinstance(spec[0], str) else spec[0]
+            size = 1
+            for a in axes:
+                size *= c.mesh.shape[a]
+            assert dim % size == 0
+
+    def test_n_data_and_n_model(self):
+        c = ctx()
+        assert c.n_data == 32 and c.n_model == 16
+        c1 = ctx({"data": 16, "model": 16})
+        assert c1.n_data == 16
+
+
+class TestArchRules:
+    """Every assigned arch must produce fully valid specs for its params."""
+
+    @pytest.mark.parametrize("arch", [
+        "qwen3-4b", "qwen2-vl-7b", "phi3-medium-14b", "gemma3-4b",
+        "mixtral-8x22b", "granite-moe-3b-a800m", "deepseek-coder-33b",
+        "mamba2-2.7b", "jamba-1.5-large-398b", "seamless-m4t-medium",
+    ])
+    def test_param_specs_divide(self, arch):
+        import jax
+        from repro.configs import ARCHS
+        from repro.models.registry import model_fns
+
+        cfg = ARCHS[arch]
+        fns = model_fns(cfg)
+        shapes = jax.eval_shape(
+            lambda: fns.init_params(jax.random.PRNGKey(0), cfg))
+        logical = fns.param_logical(cfg)
+        c = ctx()
+
+        def is_logical(x):
+            return isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x)
+
+        def check(log, shp):
+            spec = c.spec(log, shp.shape)
+            for dim, axes in zip(shp.shape, tuple(spec) + (None,) * 10):
+                if axes is None:
+                    continue
+                flat = (axes,) if isinstance(axes, str) else axes
+                size = 1
+                for a in flat:
+                    size *= c.mesh.shape[a]
+                assert dim % size == 0, (arch, log, shp.shape, spec)
+            return None
+
+        jax.tree.map(check, logical, shapes, is_leaf=is_logical)

@@ -1,0 +1,96 @@
+"""Storage tier simulator: bandwidth pacing + thread scaling shape."""
+import tempfile
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.core.stats import IOTracer
+from repro.core.storage import (
+    NativeStorage, SimulatedStorage, TIERS, TierSpec, make_storage,
+)
+
+
+class TestNative:
+    def test_roundtrip_and_meta(self, tmp_storage):
+        tmp_storage.write_file("a/b.bin", b"xyz", sync=True)
+        assert tmp_storage.read_file("a/b.bin") == b"xyz"
+        assert tmp_storage.exists("a/b.bin")
+        assert tmp_storage.size("a/b.bin") == 3
+        tmp_storage.rename("a/b.bin", "a/c.bin")
+        assert not tmp_storage.exists("a/b.bin")
+        tmp_storage.remove("a")
+        assert not tmp_storage.exists("a")
+
+    def test_tracer_counts(self):
+        tracer = IOTracer()
+        with tempfile.TemporaryDirectory() as d:
+            st = NativeStorage(d, tracer)
+            st.write_file("f", b"x" * 1000)
+            st.read_file("f")
+        t = tracer.totals()
+        assert t["write_bytes"] == 1000 and t["read_bytes"] == 1000
+        assert t["write_ops"] == 1 and t["read_ops"] == 1
+
+
+class TestSimulated:
+    def test_write_bandwidth_paced(self):
+        spec = TierSpec("slow", 10e6, 10e6, 10e6, 10e6, 0, 0)
+        with tempfile.TemporaryDirectory() as d:
+            st = SimulatedStorage(d, spec)
+            t0 = time.monotonic()
+            st.write_file("f", b"x" * 2_000_000)  # 2MB at 10MB/s >= 0.2s
+            el = time.monotonic() - t0
+        assert el >= 0.18, f"not paced: {el}"
+
+    def test_read_faster_tier_is_faster(self):
+        with tempfile.TemporaryDirectory() as d1, tempfile.TemporaryDirectory() as d2:
+            hdd = make_storage("hdd", d1, time_scale=0.2)
+            opt = make_storage("optane", d2, time_scale=0.2)
+            data = b"x" * 3_000_000
+            hdd.write_file("f", data)
+            opt.write_file("f", data)
+            t0 = time.monotonic(); hdd.read_file("f"); t_hdd = time.monotonic() - t0
+            t0 = time.monotonic(); opt.read_file("f"); t_opt = time.monotonic() - t0
+        assert t_hdd > t_opt * 2
+
+    def test_thread_scaling_saturates_at_aggregate(self):
+        """Many concurrent readers can't exceed the aggregate cap."""
+        spec = TierSpec("cap", read_bw=20e6, write_bw=20e6,
+                        stream_read_bw=10e6, stream_write_bw=10e6,
+                        seek_latency=0, seek_contention=0)
+        with tempfile.TemporaryDirectory() as d:
+            st = SimulatedStorage(d, spec)
+            for i in range(8):
+                st.write_file(f"f{i}", b"x" * 500_000)
+            t0 = time.monotonic()
+            with ThreadPoolExecutor(8) as pool:
+                list(pool.map(lambda i: st.read_file(f"f{i}"), range(8)))
+            el = time.monotonic() - t0
+        # 4MB at 20MB/s aggregate -> >= 0.2s regardless of 8 threads
+        assert el >= 0.17, f"aggregate cap violated: {el}"
+
+    def test_seek_contention_penalizes_hdd_concurrency(self):
+        spec = TIERS["hdd"]
+        lat2 = spec.seek_latency * (1 + spec.seek_contention)
+        assert lat2 > spec.seek_latency
+
+    def test_unknown_kind_raises(self):
+        with pytest.raises(ValueError):
+            make_storage("floppy", "/tmp/x")
+
+
+class TestTracerTimeline:
+    def test_timeline_csv(self):
+        tracer = IOTracer(interval_s=0.05)
+        with tempfile.TemporaryDirectory() as d:
+            st = NativeStorage(d, tracer)
+            st.write_file("f", b"x" * 100)
+            time.sleep(0.12)
+            st.read_file("f")
+        rows = tracer.timeline()
+        assert rows[0]["write_mb"] > 0
+        assert rows[-1]["read_mb"] > 0
+        csv = tracer.to_csv()
+        assert csv.splitlines()[0].startswith("t_s,")
