@@ -12,7 +12,7 @@ import time
 
 sys.path.insert(0, "src")
 
-ALL = ["table1", "fig4", "fig5", "fig6", "fig7", "fig9", "roofline"]
+ALL = ["table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "roofline"]
 
 
 def main() -> None:
@@ -20,10 +20,10 @@ def main() -> None:
     # fresh results file
     os.makedirs("reports", exist_ok=True)
     from . import (fig4_threads, fig5_read_only, fig6_prefetch,
-                   fig7_batchsize, fig9_checkpoint, roofline_table,
-                   table1_ior)
+                   fig7_batchsize, fig8_trace, fig9_checkpoint,
+                   roofline_table, table1_ior)
     mods = dict(table1=table1_ior, fig4=fig4_threads, fig5=fig5_read_only,
-                fig6=fig6_prefetch, fig7=fig7_batchsize,
+                fig6=fig6_prefetch, fig7=fig7_batchsize, fig8=fig8_trace,
                 fig9=fig9_checkpoint, roofline=roofline_table)
     for name in which:
         t0 = time.monotonic()

@@ -12,6 +12,7 @@ sys.path.insert(0, "src")
 import jax
 import jax.numpy as jnp
 
+from repro import trace
 from repro.configs import ALEXNET_SMOKE as CFG
 from repro.core import IOTracer, image_pipeline, make_storage
 from repro.core import records
@@ -25,6 +26,10 @@ def main():
     ap.add_argument("--threads", type=int, default=4)
     ap.add_argument("--prefetch", type=int, default=1)
     ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="collect per-op spans and write a Chrome trace "
+                         "(open in Perfetto); also prints the per-stage "
+                         "Darshan-style report")
     args = ap.parse_args()
 
     tracer = IOTracer(0.25)
@@ -49,6 +54,7 @@ def main():
         new_p = jax.tree.map(lambda p, gg: p - 1e-4 * gg, state["params"], g)
         return {"params": new_p, "step": state["step"] + 1}, {"loss": loss}
 
+    collector = trace.start() if args.trace else None
     tr = Trainer(train_step, state, iter(ds))
     tr.run(args.steps)
     rep = tr.report()
@@ -58,6 +64,14 @@ def main():
     print(f"  losses: {[round(h['loss'], 3) for h in tr.history]}")
     print("dstat-style read trace (MB/s):")
     print(tracer.to_csv())
+    if collector is not None:
+        trace.stop()
+        trace.dump_chrome_trace(collector, args.trace,
+                                process_name="alexnet-miniapp")
+        print(f"\nChrome trace written to {args.trace}")
+        print(trace.to_markdown(collector.spans(),
+                                title="Per-stage I/O report",
+                                counters=collector.counters()))
 
 
 if __name__ == "__main__":

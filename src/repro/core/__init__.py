@@ -10,7 +10,16 @@
 * :mod:`repro.core.checkpoint` — sharded TF-Saver-like checkpointing.
 * :mod:`repro.core.burst_buffer` — fast-tier staging + async drain (the 2.6x).
 * :mod:`repro.core.microbench` — STREAM-like ingestion benchmark.
-* :mod:`repro.core.stats` — dstat-like I/O tracing.
+* :mod:`repro.core.stats` — dstat-like I/O timeline view, an adapter over
+  the :mod:`repro.trace` collector.
+
+Telemetry: every I/O layer here (storage reads/writes, per-element
+map/decode, prefetch fetches, checkpoint save/restore, burst-buffer
+drains) emits stage-attributed spans through :mod:`repro.trace` — the
+tf-Darshan-style subsystem.  Tracing is off by default; call
+``repro.trace.start()`` to collect, then export with
+``repro.trace.dump_chrome_trace`` (Perfetto) or summarize with
+``repro.trace.to_markdown``.
 """
 from .dataset import Dataset, image_pipeline
 from .prefetcher import PrefetchIterator, prefetch_to_device

@@ -18,6 +18,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, List, Optional
 
+from .. import trace
 from .checkpoint import CheckpointSaver, SaveResult, CHECKPOINT_MARKER
 
 
@@ -131,7 +132,13 @@ class BurstBufferCheckpointer:
                 self._q.task_done()
 
     def _drain_one(self, job) -> None:
-        step, files, n_bytes, t_start, staged_s = job
+        step, files, n_bytes, _t_start, staged_s = job
+        with trace.span(trace.STAGE_DRAIN, f"drain:{self.prefix}-{step}",
+                        n_bytes):
+            self._drain_files(step, files, n_bytes, staged_s)
+
+    def _drain_files(self, step: int, files: List[str], n_bytes: int,
+                     staged_s: float) -> None:
         t0 = time.monotonic()
         for path in files:
             # read from fast tier (fast read cost), write to slow tier

@@ -32,6 +32,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import trace
+
 CHECKPOINT_MARKER = "checkpoint"
 _QBLOCK = 256  # quantization block (last-dim) size
 
@@ -142,6 +144,12 @@ class CheckpointSaver:
 
     # -- save --------------------------------------------------------------------
     def save(self, step: int, tree: Any, extra_meta: Optional[dict] = None) -> SaveResult:
+        with trace.span(trace.STAGE_CKPT_WRITE, f"save:{self.prefix}-{step}") as sp:
+            result = self._save(step, tree, extra_meta)
+            sp.set_bytes(result.n_bytes)
+        return result
+
+    def _save(self, step: int, tree: Any, extra_meta: Optional[dict] = None) -> SaveResult:
         t0 = time.monotonic()
         flat, treedef = flatten_pytree(tree)
         base = self._base(step)
@@ -253,6 +261,12 @@ class CheckpointSaver:
             step = self.latest_step()
             if step is None:
                 raise FileNotFoundError(f"no checkpoint under {self.prefix}")
+        with trace.span(trace.STAGE_CKPT_RESTORE, f"restore:{self.prefix}-{step}") as sp:
+            flat, meta = self._restore(step)
+            sp.set_bytes(sum(a.nbytes for a in flat.values()))
+        return flat, meta
+
+    def _restore(self, step: int) -> Tuple[Dict[str, np.ndarray], dict]:
         base = self._base(step)
         meta = json.loads(self.storage.read_file(f"{base}.meta"))
         index = json.loads(self.storage.read_file(f"{base}.index"))

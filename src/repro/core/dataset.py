@@ -33,6 +33,7 @@ from typing import Any, Callable, Iterable, Iterator, List, Optional, Sequence
 
 import numpy as np
 
+from .. import trace
 from .prefetcher import PrefetchIterator
 
 
@@ -103,12 +104,16 @@ class Dataset:
         deterministic: bool = True,
     ) -> "Dataset":
         upstream = self._gen_fn
+        fn_label = getattr(fn, "__name__", "map_fn")
 
         def safe_fn(item):
-            try:
-                return fn(item)
-            except Exception as e:  # surfaced at the iterator (TF semantics)
-                return _ErrorMarker(e)
+            # one decode-stage span per element; nested storage_read spans
+            # (from fn's read_file call) attribute the I/O share of this time
+            with trace.span(trace.STAGE_DECODE, fn_label):
+                try:
+                    return fn(item)
+                except Exception as e:  # surfaced at the iterator (TF semantics)
+                    return _ErrorMarker(e)
 
         if num_parallel_calls <= 1:
             def gen_serial():

@@ -16,6 +16,8 @@ import threading
 from collections import deque
 from typing import Any, Iterable, Iterator, Optional
 
+from .. import trace
+
 
 class _Sentinel:
     pass
@@ -43,13 +45,21 @@ class PrefetchIterator:
     # -- producer ------------------------------------------------------------
     def _run(self) -> None:
         try:
-            for item in self._upstream:
+            while True:
+                # span covers only the upstream pull (the background work the
+                # prefetcher exists to overlap), not the buffer-full wait
+                with trace.span(trace.STAGE_PREFETCH, "fetch"):
+                    try:
+                        item = next(self._upstream)
+                    except StopIteration:
+                        return
                 with self._cond:
                     while len(self._buffer) >= self._buffer_size and not self._closed:
                         self._cond.wait()
                     if self._closed:
                         return
                     self._buffer.append(item)
+                    trace.count("prefetch_buffer", len(self._buffer))
                     self._cond.notify_all()
         except BaseException as e:  # propagate to consumer
             with self._cond:

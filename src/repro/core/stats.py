@@ -1,16 +1,28 @@
 """dstat-like I/O activity tracing (paper §IV-B, Fig. 8/10).
 
 The paper traces disk activity with ``dstat`` at 1 Hz and plots MB read/written
-per second.  :class:`IOTracer` reproduces that: every byte moved through a
-:class:`repro.core.storage.Storage` is recorded into per-interval buckets and
-can be dumped as a dstat-style CSV timeline.
+per second.  :class:`IOTracer` reproduces that view as an adapter over the
+fine-grained :mod:`repro.trace` machinery: the per-interval buckets are
+folded incrementally (bounded memory, like dstat itself), and setting
+``keep_events`` additionally lands every ``record()`` as an instant event in
+a private :class:`repro.trace.Tracer` — exposing the raw per-op log to the
+span/export tooling.  Callers that want per-operation spans everywhere
+should use :mod:`repro.trace` directly.
 """
 from __future__ import annotations
 
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Tuple
+
+from .. import trace as _trace
+
+_KIND_STAGE = {
+    "read": _trace.STAGE_STORAGE_READ,
+    "write": _trace.STAGE_STORAGE_WRITE,
+}
+_STAGE_KIND = {v: k for k, v in _KIND_STAGE.items()}
 
 
 @dataclass
@@ -22,23 +34,40 @@ class _Bucket:
 
 
 class IOTracer:
-    """Thread-safe per-interval I/O byte counter (dstat analogue)."""
+    """Thread-safe per-interval I/O byte counter (dstat analogue).
+
+    Buckets are folded incrementally in ``record()`` so memory stays
+    O(run length / interval), independent of op count.  With
+    ``keep_events`` set, each op is also recorded as an instant event in
+    the private :class:`repro.trace.Tracer` exposed as :attr:`collector`
+    (per-op log for export/report tooling — unbounded, hence opt-in).
+    """
 
     def __init__(self, interval_s: float = 1.0):
         self.interval_s = float(interval_s)
+        self.keep_events = False
         self._lock = threading.Lock()
         self._buckets: Dict[int, _Bucket] = {}
+        self._collector = _trace.Tracer(enabled=True)
         self._t0 = time.monotonic()
-        self.events: List[tuple] = []  # (t, kind, nbytes, tag) raw log
-        self.keep_events = False
+
+    @property
+    def collector(self) -> "_trace.Tracer":
+        """Raw per-op span collector (populated when ``keep_events``)."""
+        return self._collector
 
     def reset(self) -> None:
         with self._lock:
             self._buckets.clear()
-            self.events.clear()
             self._t0 = time.monotonic()
+        self._collector.reset()
 
     def record(self, kind: str, nbytes: int, tag: str = "") -> None:
+        stage = _KIND_STAGE.get(kind)
+        if stage is None:
+            raise ValueError(
+                f"unknown I/O kind {kind!r}; expected 'read' or 'write'"
+            )
         t = time.monotonic() - self._t0
         idx = int(t / self.interval_s)
         with self._lock:
@@ -49,8 +78,17 @@ class IOTracer:
             else:
                 b.write_bytes += nbytes
                 b.write_ops += 1
-            if self.keep_events:
-                self.events.append((t, kind, nbytes, tag))
+        if self.keep_events:
+            self._collector.instant(stage, tag, nbytes, t=t)
+
+    # -- raw log (API compat: populated only when keep_events is set) -------
+    @property
+    def events(self) -> List[tuple]:
+        """(t, kind, nbytes, tag) rows, empty unless ``keep_events``."""
+        return [
+            (r.t0, _STAGE_KIND.get(r.stage, r.stage), r.nbytes, r.name)
+            for r in self._collector.spans()
+        ]
 
     # -- reporting ---------------------------------------------------------
     def timeline(self) -> List[dict]:

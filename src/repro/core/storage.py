@@ -33,6 +33,7 @@ from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, List, Optional
 
+from .. import trace
 from .stats import IOTracer
 
 
@@ -128,20 +129,23 @@ class NativeStorage(Storage):
         return os.path.join(self.root, path)
 
     def read_file(self, path: str) -> bytes:
-        with open(self._abs(path), "rb") as f:
-            data = f.read()
+        with trace.span(trace.STAGE_STORAGE_READ, path) as sp:
+            with open(self._abs(path), "rb") as f:
+                data = f.read()
+            sp.set_bytes(len(data))
         if self.tracer:
             self.tracer.record("read", len(data), path)
         return data
 
     def write_file(self, path: str, data: bytes, sync: bool = False) -> None:
-        ap = self._abs(path)
-        os.makedirs(os.path.dirname(ap) or ".", exist_ok=True)
-        with open(ap, "wb") as f:
-            f.write(data)
-            if sync:
-                f.flush()
-                os.fsync(f.fileno())
+        with trace.span(trace.STAGE_STORAGE_WRITE, path, len(data)):
+            ap = self._abs(path)
+            os.makedirs(os.path.dirname(ap) or ".", exist_ok=True)
+            with open(ap, "wb") as f:
+                f.write(data)
+                if sync:
+                    f.flush()
+                    os.fsync(f.fileno())
         if self.tracer:
             self.tracer.record("write", len(data), path)
 
@@ -283,20 +287,24 @@ class SimulatedStorage(Storage):
     def read_file(self, path: str) -> bytes:
         n = self._enter()
         t0 = time.monotonic()
-        try:
-            with open(self._abs(path), "rb") as f:
-                data = f.read()
-            # the op completes at the later of: single-stream time (incl.
-            # seek), shared device-queue time — real backing-I/O time is
-            # credited, so fast tiers aren't penalized by the real disk
-            stream_end = t0 + self._seek_latency(n) + len(data) / (
-                self.spec.stream_read_bw / self.time_scale)
-            bucket_end = self._read_bucket.reserve(len(data))
-            delay = max(stream_end, bucket_end) - time.monotonic()
-            if delay > 0:
-                time.sleep(delay)
-        finally:
-            self._exit()
+        # span covers the modelled device time (pacing sleeps included):
+        # the trace shows what the simulated tier would really cost
+        with trace.span(trace.STAGE_STORAGE_READ, path) as sp:
+            try:
+                with open(self._abs(path), "rb") as f:
+                    data = f.read()
+                sp.set_bytes(len(data))
+                # the op completes at the later of: single-stream time (incl.
+                # seek), shared device-queue time — real backing-I/O time is
+                # credited, so fast tiers aren't penalized by the real disk
+                stream_end = t0 + self._seek_latency(n) + len(data) / (
+                    self.spec.stream_read_bw / self.time_scale)
+                bucket_end = self._read_bucket.reserve(len(data))
+                delay = max(stream_end, bucket_end) - time.monotonic()
+                if delay > 0:
+                    time.sleep(delay)
+            finally:
+                self._exit()
         if self.tracer:
             self.tracer.record("read", len(data), path)
         return data
@@ -304,23 +312,24 @@ class SimulatedStorage(Storage):
     def write_file(self, path: str, data: bytes, sync: bool = False) -> None:
         n = self._enter()
         t0 = time.monotonic()
-        try:
-            ap = self._abs(path)
-            os.makedirs(os.path.dirname(ap) or ".", exist_ok=True)
-            with open(ap, "wb") as f:
-                f.write(data)
-                # NOTE: no real fsync — durability cost is part of the
-                # *modelled* device time; paying the backing disk's real
-                # fsync would distort every tier with a constant unrelated
-                # to the modelled device.
-            stream_end = t0 + self._seek_latency(n) + len(data) / (
-                self.spec.stream_write_bw / self.time_scale)
-            bucket_end = self._write_bucket.reserve(len(data))
-            delay = max(stream_end, bucket_end) - time.monotonic()
-            if delay > 0:
-                time.sleep(delay)
-        finally:
-            self._exit()
+        with trace.span(trace.STAGE_STORAGE_WRITE, path, len(data)):
+            try:
+                ap = self._abs(path)
+                os.makedirs(os.path.dirname(ap) or ".", exist_ok=True)
+                with open(ap, "wb") as f:
+                    f.write(data)
+                    # NOTE: no real fsync — durability cost is part of the
+                    # *modelled* device time; paying the backing disk's real
+                    # fsync would distort every tier with a constant unrelated
+                    # to the modelled device.
+                stream_end = t0 + self._seek_latency(n) + len(data) / (
+                    self.spec.stream_write_bw / self.time_scale)
+                bucket_end = self._write_bucket.reserve(len(data))
+                delay = max(stream_end, bucket_end) - time.monotonic()
+                if delay > 0:
+                    time.sleep(delay)
+            finally:
+                self._exit()
         if self.tracer:
             self.tracer.record("write", len(data), path)
 

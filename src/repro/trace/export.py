@@ -1,0 +1,128 @@
+"""Exporters: Chrome ``trace_event`` JSON (Perfetto/chrome://tracing loadable).
+
+Format reference: the Trace Event Format spec (JSON Array / JSON Object
+flavors).  We emit the Object flavor ``{"traceEvents": [...]}`` with:
+
+* ``ph:"M"`` metadata events naming the process and each thread;
+* ``ph:"X"`` complete events — one per span, ``ts``/``dur`` in microseconds,
+  ``cat`` carrying the pipeline stage, ``args`` carrying bytes and any
+  user attrs (nesting is implied by ts/dur containment per tid);
+* ``ph:"C"`` counter events for gauges (prefetch buffer depth, ...).
+
+:func:`from_chrome_trace` parses the same schema back into records, so a
+trace survives a JSON round-trip losslessly (used by tests and by offline
+analysis of traces captured on another machine).
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, Iterable, List, Optional, Tuple, Union
+
+from .tracer import CounterRecord, SpanRecord, Tracer
+
+_PID = 1  # single-process collector; shards would use distinct pids
+
+
+def to_chrome_trace(
+    spans: Iterable[SpanRecord],
+    counters: Iterable[CounterRecord] = (),
+    process_name: str = "repro",
+) -> dict:
+    """Build the Trace-Event-Format JSON object for ``spans``/``counters``."""
+    events: List[dict] = [
+        dict(ph="M", name="process_name", pid=_PID, tid=0,
+             args=dict(name=process_name)),
+    ]
+    seen_tids: Dict[int, str] = {}
+    spans = list(spans)
+    for r in spans:
+        if r.tid not in seen_tids:
+            seen_tids[r.tid] = r.thread
+    for tid, tname in sorted(seen_tids.items()):
+        events.append(
+            dict(ph="M", name="thread_name", pid=_PID, tid=tid,
+                 args=dict(name=tname))
+        )
+    for r in spans:
+        args: Dict[str, object] = dict(bytes=r.nbytes)
+        if r.args:
+            args.update(r.args)
+        events.append(
+            dict(ph="X", name=r.name or r.stage, cat=r.stage, pid=_PID,
+                 tid=r.tid, ts=r.t0 * 1e6, dur=r.dur * 1e6, args=args)
+        )
+    for c in counters:
+        events.append(
+            dict(ph="C", name=c.name, pid=_PID, tid=0, ts=c.t * 1e6,
+                 args={c.name: c.value})
+        )
+    return dict(traceEvents=events, displayTimeUnit="ms")
+
+
+def dump_chrome_trace(
+    source: Union[Tracer, Iterable[SpanRecord]],
+    path: str,
+    counters: Optional[Iterable[CounterRecord]] = None,
+    process_name: str = "repro",
+) -> dict:
+    """Serialize ``source`` (a Tracer or span list) to ``path``; returns the
+    trace object for further inspection."""
+    if isinstance(source, Tracer):
+        spans = source.spans()
+        if counters is None:
+            counters = source.counters()
+    else:
+        spans = list(source)
+    obj = to_chrome_trace(spans, counters or (), process_name)
+    with open(path, "w") as f:
+        json.dump(obj, f)
+    return obj
+
+
+def from_chrome_trace(
+    obj: Union[dict, str],
+) -> Tuple[List[SpanRecord], List[CounterRecord]]:
+    """Parse a Trace-Event-Format object (or its JSON string) back into
+    ``(spans, counters)``.  Metadata events are consumed to recover thread
+    names; unknown phases are ignored (the spec allows many)."""
+    if isinstance(obj, str):
+        obj = json.loads(obj)
+    events = obj["traceEvents"] if isinstance(obj, dict) else obj
+    thread_names: Dict[int, str] = {}
+    spans: List[SpanRecord] = []
+    counters: List[CounterRecord] = []
+    for ev in events:
+        ph = ev.get("ph")
+        if ph == "M" and ev.get("name") == "thread_name":
+            thread_names[int(ev.get("tid", 0))] = ev["args"]["name"]
+    for ev in events:
+        ph = ev.get("ph")
+        if ph == "X":
+            args = dict(ev.get("args") or {})
+            nbytes = int(args.pop("bytes", 0))
+            tid = int(ev.get("tid", 0))
+            cat = ev.get("cat", "")
+            name = ev.get("name", "")
+            spans.append(
+                SpanRecord(
+                    stage=cat or name,
+                    name="" if name == cat else name,
+                    tid=tid,
+                    thread=thread_names.get(tid, f"tid-{tid}"),
+                    t0=float(ev["ts"]) / 1e6,
+                    dur=float(ev.get("dur", 0.0)) / 1e6,
+                    nbytes=nbytes,
+                    args=args or None,
+                )
+            )
+        elif ph == "C":
+            name = ev.get("name", "")
+            vals = ev.get("args") or {}
+            value = vals.get(name, next(iter(vals.values()), 0.0))
+            counters.append(
+                CounterRecord(name=name, t=float(ev["ts"]) / 1e6,
+                              value=float(value), tid=int(ev.get("tid", 0)))
+            )
+    spans.sort(key=lambda r: (r.t0, -r.dur))
+    counters.sort(key=lambda c: c.t)
+    return spans, counters

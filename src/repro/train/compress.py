@@ -63,10 +63,13 @@ def compressed_allreduce_stacked(mesh, x: jax.Array, axis_name: str = "pod"
         return compressed_psum_mean(xs[0], axis_name)[None]
 
     nd = x.ndim
-    f = jax.shard_map(
-        per_shard, mesh=mesh,
-        in_specs=P(axis_name, *([None] * (nd - 1))),
-        out_specs=P(axis_name, *([None] * (nd - 1))),
-        check_vma=False,
-    )
+    spec = P(axis_name, *([None] * (nd - 1)))
+    if hasattr(jax, "shard_map"):
+        f = jax.shard_map(per_shard, mesh=mesh, in_specs=spec,
+                          out_specs=spec, check_vma=False)
+    else:  # older jax: experimental location, check_rep instead of check_vma
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        f = _shard_map(per_shard, mesh=mesh, in_specs=spec,
+                       out_specs=spec, check_rep=False)
     return f(x)[0]

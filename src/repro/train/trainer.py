@@ -23,6 +23,7 @@ from typing import Any, Callable, Dict, Iterable, List, Optional
 import jax
 import numpy as np
 
+from .. import trace
 from ..core.stats import StepTimer
 
 
@@ -72,13 +73,15 @@ class Trainer:
     def run(self, n_steps: int) -> List[Dict]:
         for _ in range(n_steps):
             t0 = time.monotonic()
-            try:
-                batch = next(self.data_iter)
-            except StopIteration:
-                break
+            with trace.span(trace.STAGE_DATA_WAIT, "next_batch"):
+                try:
+                    batch = next(self.data_iter)
+                except StopIteration:
+                    break
             t1 = time.monotonic()
-            self.state, metrics = self.train_step(self.state, batch)
-            metrics = {k: float(jax.device_get(v)) for k, v in metrics.items()}
+            with trace.span(trace.STAGE_COMPUTE, "train_step"):
+                self.state, metrics = self.train_step(self.state, batch)
+                metrics = {k: float(jax.device_get(v)) for k, v in metrics.items()}
             t2 = time.monotonic()
             self.timer.data_wait_s.append(t1 - t0)
             self.timer.compute_s.append(t2 - t1)

@@ -1,0 +1,98 @@
+"""Deterministic mini-fallback for ``hypothesis`` on bare environments.
+
+The real hypothesis (installed via the ``test`` extra in pyproject.toml)
+shrinks failures and explores the strategy space adaptively; this shim only
+replays a fixed pseudo-random sample of each strategy so the property tests
+still *run* — with reproducible examples — when the package is absent.
+Only the strategy combinators this suite actually uses are implemented.
+
+Usage (at the top of a test module)::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:
+        from _hypothesis_fallback import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import functools
+import random
+from types import SimpleNamespace
+
+_SEED = 0xD5EED
+_DEFAULT_EXAMPLES = 20
+_MAX_EXAMPLES_CAP = 50  # keep bare-env runtime bounded
+
+
+class _Strategy:
+    __slots__ = ("draw",)
+
+    def __init__(self, draw):
+        self.draw = draw  # draw(rng) -> value
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def _floats(min_value, max_value, **_kw):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def _booleans():
+    return _Strategy(lambda r: r.random() < 0.5)
+
+
+def _sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda r: r.choice(seq))
+
+
+def _binary(min_size=0, max_size=16):
+    return _Strategy(
+        lambda r: bytes(r.getrandbits(8)
+                        for _ in range(r.randint(min_size, max_size)))
+    )
+
+
+def _lists(elements, min_size=0, max_size=16):
+    return _Strategy(
+        lambda r: [elements.draw(r)
+                   for _ in range(r.randint(min_size, max_size))]
+    )
+
+
+strategies = SimpleNamespace(
+    integers=_integers,
+    floats=_floats,
+    booleans=_booleans,
+    sampled_from=_sampled_from,
+    binary=_binary,
+    lists=_lists,
+)
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # @settings may sit above or below @given; check both targets
+            n = getattr(wrapper, "_max_examples",
+                        getattr(fn, "_max_examples", _DEFAULT_EXAMPLES))
+            rng = random.Random(_SEED)
+            for _ in range(min(n, _MAX_EXAMPLES_CAP)):
+                drawn = [s.draw(rng) for s in arg_strategies]
+                drawn_kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                fn(*args, *drawn, **kwargs, **drawn_kw)
+        # pytest must not see the strategy params as fixtures: hide the
+        # wrapped signature so inspection falls back to (*args, **kwargs)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

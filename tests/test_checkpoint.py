@@ -3,7 +3,11 @@ import json
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # bare env (see `test` extra in pyproject.toml)
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.checkpoint import (
     CheckpointSaver, dequantize_blockwise, quantize_blockwise,
@@ -113,8 +117,10 @@ class TestElastic:
         t = {"w": np.arange(64, dtype=np.float32).reshape(8, 8)}
         saver = CheckpointSaver(tmp_storage, "ckpt/m")
         saver.save(3, t)
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh_kw = {}
+        if hasattr(jax.sharding, "AxisType"):  # absent on older jax
+            mesh_kw["axis_types"] = (jax.sharding.AxisType.Auto,)
+        mesh = jax.make_mesh((1,), ("data",), **mesh_kw)
         sh = {"w": NamedSharding(mesh, P("data", None))}
         out = saver.restore_sharded(t, sh)
         np.testing.assert_array_equal(np.asarray(out["w"]), t["w"])

@@ -4,7 +4,10 @@ import time
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # bare env (see `test` extra in pyproject.toml)
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.dataset import Dataset
 

@@ -12,9 +12,22 @@ _ENV = dict(os.environ,
             XLA_FLAGS="--xla_force_host_platform_device_count=8",
             PYTHONPATH="src")
 
+# prepended to every subprocess: mesh construction that works with and
+# without jax.sharding.AxisType (absent on older jax)
+_PREAMBLE = textwrap.dedent("""
+    import jax as _jax_compat
+
+    def make_mesh(shape, names):
+        kw = {}
+        if hasattr(_jax_compat.sharding, "AxisType"):
+            kw["axis_types"] = (_jax_compat.sharding.AxisType.Auto,) * len(shape)
+        return _jax_compat.make_mesh(shape, names, **kw)
+""")
+
 
 def run_py(code: str, timeout=600) -> str:
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+    r = subprocess.run([sys.executable, "-c",
+                        _PREAMBLE + textwrap.dedent(code)],
                        env=_ENV, capture_output=True, text=True,
                        timeout=timeout, cwd=os.getcwd())
     assert r.returncode == 0, f"stderr:\n{r.stderr[-3000:]}"
@@ -26,14 +39,12 @@ class TestDistributed:
     def test_sharded_train_step_runs_and_learns(self):
         out = run_py("""
             import jax, jax.numpy as jnp, json
-            from jax.sharding import AxisType
             from repro.configs import ARCHS
             from repro.sharding.rules import ShardingCtx
             from repro.train import steps as S
             from repro.train.optimizer import OptConfig
 
-            mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
-                                 axis_types=(AxisType.Auto,)*3)
+            mesh = make_mesh((2,2,2), ("pod","data","model"))
             cfg = ARCHS["qwen3-4b"].smoke()
             opt = OptConfig()
             ctx = ShardingCtx(mesh=mesh)
@@ -62,10 +73,8 @@ class TestDistributed:
     def test_compressed_allreduce_matches_mean(self):
         out = run_py("""
             import jax, jax.numpy as jnp, numpy as np
-            from jax.sharding import AxisType
             from repro.train.compress import compressed_allreduce_stacked
-            mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
-                                 axis_types=(AxisType.Auto,)*3)
+            mesh = make_mesh((2,2,2), ("pod","data","model"))
             x = jax.random.normal(jax.random.PRNGKey(0), (2, 4096)) * 3
             with mesh:
                 out = compressed_allreduce_stacked(mesh, x)
@@ -82,11 +91,10 @@ class TestDistributed:
         ckpt_dir = str(tmp_path)
         run_py(f"""
             import jax, jax.numpy as jnp, numpy as np
-            from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+            from jax.sharding import NamedSharding, PartitionSpec as P
             from repro.core.storage import NativeStorage
             from repro.core.checkpoint import CheckpointSaver
-            mesh = jax.make_mesh((4,2), ("data","model"),
-                                 axis_types=(AxisType.Auto,)*2)
+            mesh = make_mesh((4,2), ("data","model"))
             w = jnp.arange(64*32, dtype=jnp.float32).reshape(64, 32)
             w = jax.device_put(w, NamedSharding(mesh, P("data","model")))
             saver = CheckpointSaver(NativeStorage({ckpt_dir!r}), "ckpt/m")
@@ -94,11 +102,10 @@ class TestDistributed:
         """)
         out = run_py(f"""
             import jax, jax.numpy as jnp, numpy as np
-            from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+            from jax.sharding import NamedSharding, PartitionSpec as P
             from repro.core.storage import NativeStorage
             from repro.core.checkpoint import CheckpointSaver
-            mesh = jax.make_mesh((2,4), ("data","model"),
-                                 axis_types=(AxisType.Auto,)*2)
+            mesh = make_mesh((2,4), ("data","model"))
             saver = CheckpointSaver(NativeStorage({ckpt_dir!r}), "ckpt/m")
             skeleton = {{"w": np.zeros((64,32), np.float32)}}
             sh = {{"w": NamedSharding(mesh, P("data","model"))}}

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # bare env (see `test` extra in pyproject.toml)
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels.quantize import BLOCK, dequantize_blocks, quantize_blocks
@@ -20,7 +23,9 @@ class TestQuantizeKernel:
         # value sitting exactly on a rounding boundary by 1 level
         dq = np.abs(np.asarray(q, np.int32) - np.asarray(qr, np.int32))
         assert dq.max() <= 1
-        assert (dq > 0).mean() < 1e-3
+        # rate bound, with an absolute floor so a single boundary flip in a
+        # small array (1 block = 256 values) doesn't trip it
+        assert (dq > 0).sum() <= max(1, dq.size // 1000)
         np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-5)
         back = dequantize_blocks(q, s)
         br = ref.dequantize_blocks_ref(qr, sr)

@@ -1,6 +1,9 @@
 """Sharding rules: divisibility invariant (property test) + resolution."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # bare env (see `test` extra in pyproject.toml)
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.sharding.rules import DEFAULT_RULES, ShardingCtx
 
