@@ -1,0 +1,140 @@
+"""Fig. 10 extension: async snapshot checkpointing vs the paper's options.
+
+The paper's burst buffer (§III-C/V-C) shrinks checkpoint stalls by staging
+on a fast tier — but training still blocks for the full fast-tier write.
+``AsyncCheckpointer`` blocks only for the host snapshot and overlaps the
+entire sharded write with training (the write-side analogue of the paper's
+prefetcher result: complete compute/input overlap).
+
+Protocol: N_ITERS synthetic training iterations (fixed COMPUTE_S compute
+slices under trace spans), checkpoint every CKPT_EVERY.  For each tier in
+hdd/ssd/optane/lustre compare:
+
+* ``direct``  — synchronous :class:`DirectCheckpointer` to the tier;
+* ``bb``      — :class:`BurstBufferCheckpointer`, optane stage + multi-stream
+  drain to the tier;
+* ``async``   — :class:`AsyncCheckpointer` to the tier (4 shards, parallel
+  shard writes).
+
+Emits per-run rows (runtime, training-thread blocked seconds, checkpoint
+bytes, and the checkpoint-write/compute overlap ratio measured from the
+trace) plus a Darshan-style trace report for the async-hdd run proving the
+write spans land under compute (reports/fig10_async_ckpt_trace.md).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from repro import trace
+from repro.core import make_storage
+from repro.core.async_checkpoint import AsyncCheckpointer
+from repro.core.burst_buffer import BurstBufferCheckpointer, DirectCheckpointer
+
+from .common import RESULTS_DIR, SCRATCH, emit
+
+import numpy as np
+
+N_ITERS = 9
+CKPT_EVERY = 3
+COMPUTE_S = 0.05          # synthetic compute slice per iteration
+STATE_LAYERS = 4          # equal layers -> shard-parallel writes can help
+STATE_MB_EACH = 2         # 4 x 2MB = 8MB checkpoint payload
+CKPT_TIME_SCALE = float(os.environ.get("REPRO_CKPT_TIME_SCALE", "1.0"))
+TIERS = ("hdd", "ssd", "optane", "lustre")
+
+
+def make_state():
+    rng = np.random.default_rng(0)
+    return {
+        f"layer{i}":
+            rng.normal(size=(STATE_MB_EACH * 1024 * 256,)).astype(np.float32)
+        for i in range(STATE_LAYERS)
+    }
+
+
+def run_one(checkpointer, state):
+    """Synthetic training loop; returns (runtime_s, post_loop_drain_s)."""
+    t0 = time.monotonic()
+    for i in range(1, N_ITERS + 1):
+        with trace.span(trace.STAGE_COMPUTE, "train_step"):
+            time.sleep(COMPUTE_S)
+        if i % CKPT_EVERY == 0:
+            checkpointer.save(i, state)
+    runtime = time.monotonic() - t0
+    t1 = time.monotonic()
+    checkpointer.wait()
+    drain = time.monotonic() - t1
+    checkpointer.close()
+    return runtime, drain
+
+
+def ckpt_overlap(spans) -> float:
+    """Fraction of checkpoint-write/drain busy time overlapped by compute."""
+    return trace.overlap_ratio(
+        spans,
+        fg_stages=(trace.STAGE_CKPT_WRITE, trace.STAGE_DRAIN),
+        bg_stages=(trace.STAGE_COMPUTE,),
+    )
+
+
+def run() -> None:
+    state = make_state()
+    rows = []
+    blocked = {}  # (strategy, tier) -> blocked seconds per save
+    async_hdd_report = None
+
+    with tempfile.TemporaryDirectory(dir=SCRATCH) as root:
+        def storage(tag, kind):
+            return make_storage(kind, os.path.join(root, tag),
+                                time_scale=CKPT_TIME_SCALE)
+
+        for tier in TIERS:
+            runs = {
+                "direct": lambda: DirectCheckpointer(
+                    storage(f"direct_{tier}", tier), "ck/m",
+                    n_shards=4, io_threads=4),
+                "bb": lambda: BurstBufferCheckpointer(
+                    storage(f"bb_fast_{tier}", "optane"),
+                    storage(f"bb_slow_{tier}", tier), "ck/m",
+                    n_shards=4, io_threads=4, drain_streams=4),
+                "async": lambda: AsyncCheckpointer(
+                    storage(f"async_{tier}", tier), "ck/m",
+                    n_shards=4, io_threads=4),
+            }
+            for strategy, make_ck in runs.items():
+                tracer = trace.start()
+                ck = make_ck()
+                runtime, drain = run_one(ck, state)
+                trace.stop()
+                spans = tracer.spans()
+                b = sum(ck.blocked_s)
+                blocked[(strategy, tier)] = b
+                ov = ckpt_overlap(spans)
+                rows.append(
+                    f"strategy={strategy},tier={tier},runtime_s={runtime:.2f},"
+                    f"blocked_s={b:.3f},post_loop_drain_s={drain:.2f},"
+                    f"ckpt_compute_overlap={ov:.2f}")
+                if strategy == "async" and tier == "hdd":
+                    async_hdd_report = trace.to_markdown(
+                        spans, title="fig10: async checkpoint to hdd "
+                        "(write spans overlap compute)")
+
+    frac = blocked[("async", "hdd")] / max(blocked[("direct", "hdd")], 1e-9)
+    emit("fig10_async_ckpt", rows,
+         f"async blocked fraction vs direct on hdd={frac:.3f} "
+         f"(acceptance: <=0.20); bb blocked on hdd="
+         f"{blocked[('bb', 'hdd')]:.3f}s (stages on optane, still blocks "
+         f"for the fast-tier write)")
+
+    if async_hdd_report:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        path = os.path.join(RESULTS_DIR, "fig10_async_ckpt_trace.md")
+        with open(path, "w") as f:
+            f.write(async_hdd_report)
+        print(f"# trace report -> {path}")
+
+
+if __name__ == "__main__":
+    run()

@@ -12,7 +12,8 @@ import time
 
 sys.path.insert(0, "src")
 
-ALL = ["table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "roofline"]
+ALL = ["table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
+       "roofline"]
 
 
 def main() -> None:
@@ -21,10 +22,11 @@ def main() -> None:
     os.makedirs("reports", exist_ok=True)
     from . import (fig4_threads, fig5_read_only, fig6_prefetch,
                    fig7_batchsize, fig8_trace, fig9_checkpoint,
-                   roofline_table, table1_ior)
+                   fig10_async_ckpt, roofline_table, table1_ior)
     mods = dict(table1=table1_ior, fig4=fig4_threads, fig5=fig5_read_only,
                 fig6=fig6_prefetch, fig7=fig7_batchsize, fig8=fig8_trace,
-                fig9=fig9_checkpoint, roofline=roofline_table)
+                fig9=fig9_checkpoint, fig10=fig10_async_ckpt,
+                roofline=roofline_table)
     for name in which:
         t0 = time.monotonic()
         print(f"# --- {name} ---", flush=True)

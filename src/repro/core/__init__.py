@@ -7,8 +7,15 @@
 * :mod:`repro.core.records` — record container + image payloads + decode.
 * :mod:`repro.core.storage` — storage tiers (native + Table-I-calibrated
   simulator: hdd / ssd / optane / lustre).
-* :mod:`repro.core.checkpoint` — sharded TF-Saver-like checkpointing.
-* :mod:`repro.core.burst_buffer` — fast-tier staging + async drain (the 2.6x).
+* :mod:`repro.core.checkpoint` — sharded TF-Saver-like checkpointing with
+  parallel shard I/O (``io_threads``).
+* :mod:`repro.core.async_checkpoint` — async snapshot checkpointing:
+  training blocks for the host snapshot only; a background writer does the
+  sharded save; ``save()`` returns a future-like handle.
+* :mod:`repro.core.burst_buffer` — fast-tier staging + multi-stream async
+  drain (the 2.6x).
+* :mod:`repro.core.faults` — :class:`FaultyStorage` fault injection, the
+  crash-consistency proof harness for all of the above.
 * :mod:`repro.core.microbench` — STREAM-like ingestion benchmark.
 * :mod:`repro.core.stats` — dstat-like I/O timeline view, an adapter over
   the :mod:`repro.trace` collector.
@@ -25,12 +32,16 @@ from .dataset import Dataset, image_pipeline
 from .prefetcher import PrefetchIterator, prefetch_to_device
 from .storage import Storage, NativeStorage, SimulatedStorage, TIERS, make_storage
 from .checkpoint import CheckpointSaver
+from .async_checkpoint import AsyncCheckpointer, AsyncSaveHandle
 from .burst_buffer import BurstBufferCheckpointer, DirectCheckpointer
+from .faults import FaultInjected, FaultyStorage
 from .stats import IOTracer, StepTimer
 
 __all__ = [
     "Dataset", "image_pipeline", "PrefetchIterator", "prefetch_to_device",
     "Storage", "NativeStorage", "SimulatedStorage", "TIERS", "make_storage",
-    "CheckpointSaver", "BurstBufferCheckpointer", "DirectCheckpointer",
+    "CheckpointSaver", "AsyncCheckpointer", "AsyncSaveHandle",
+    "BurstBufferCheckpointer", "DirectCheckpointer",
+    "FaultInjected", "FaultyStorage",
     "IOTracer", "StepTimer",
 ]

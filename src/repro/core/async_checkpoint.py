@@ -1,0 +1,169 @@
+"""Async snapshot checkpointing: training blocks for the snapshot only.
+
+The paper's burst buffer (§III-C, Fig. 9/10) hides the *slow-tier* cost of a
+checkpoint behind a fast tier, but training still blocks for the full
+fast-tier write.  Its prefetcher result (§IV: complete compute/input overlap)
+points at the stronger play, which this module implements for the write path:
+
+1. **Snapshot** (blocking, :func:`repro.core.checkpoint.flatten_pytree` with
+   ``copy=True``): the pytree is materialized in host memory — device arrays
+   via ``jax.device_get``, numpy leaves by copy.  This is memory-bandwidth
+   bound (GB/s), not storage-bound (MB/s), so the training thread resumes
+   after milliseconds.
+2. **Write** (background): a dedicated writer thread runs the normal
+   sharded, atomic :meth:`CheckpointSaver.save_flat` — with the N data
+   shards themselves written concurrently on the saver's ``io_threads``
+   pool (the write-side analogue of the paper's 2.3x/7.8x read
+   thread-scaling).
+
+``save()`` returns an :class:`AsyncSaveHandle` (future-like: ``done()`` /
+``result()`` / ``exception()``).  The commit protocol is unchanged — data,
+index and meta land before the ``checkpoint`` marker — so a crash at any
+point leaves the previous checkpoint restorable (see ``tests/test_faults.py``
+for the fault-injected proof).
+
+``max_pending`` bounds host-memory use: a ``save()`` issued while that many
+snapshots are still being written blocks until a slot frees (the blocked
+time is honestly recorded in ``blocked_s``).
+
+Every phase is trace-attributed (``STAGE_CKPT_SNAPSHOT`` on the training
+thread, ``STAGE_CKPT_WRITE`` on the writer thread), so a
+:mod:`repro.trace` report shows checkpoint writes overlapping compute —
+see ``benchmarks/fig10_async_ckpt.py``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, List, Optional
+
+from .. import trace
+from .checkpoint import CheckpointSaver, SaveResult, flatten_pytree
+
+
+class AsyncSaveHandle:
+    """Future-like handle for one in-flight checkpoint save."""
+
+    def __init__(self, step: int, future, snapshot_s: float):
+        self.step = step
+        self.snapshot_s = snapshot_s
+        self._future = future
+
+    def done(self) -> bool:
+        return self._future.done()
+
+    def result(self, timeout: Optional[float] = None) -> SaveResult:
+        """Block until the background write commits; re-raises its error."""
+        return self._future.result(timeout)
+
+    def exception(self, timeout: Optional[float] = None):
+        return self._future.exception(timeout)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        state = "done" if self.done() else "pending"
+        return f"AsyncSaveHandle(step={self.step}, {state})"
+
+
+class AsyncCheckpointer:
+    """Checkpointer whose ``save()`` blocks only for the host snapshot.
+
+    Same construction surface as :class:`DirectCheckpointer` plus
+    ``io_threads`` (shard-write parallelism) and ``max_pending``
+    (host-memory backpressure).  ``save()`` returns an
+    :class:`AsyncSaveHandle`; call :meth:`wait` to drain and surface any
+    background write error.
+    """
+
+    def __init__(
+        self,
+        storage,
+        prefix: str = "ckpt/model",
+        *,
+        keep: int = 5,
+        n_shards: int = 1,
+        sync: bool = True,
+        quantize=None,
+        io_threads: Optional[int] = None,
+        max_pending: int = 2,
+    ):
+        self.saver = CheckpointSaver(
+            storage, prefix, keep=keep, n_shards=n_shards, sync=sync,
+            quantize=quantize, io_threads=io_threads,
+        )
+        self.prefix = prefix
+        self.blocked_s: List[float] = []
+        self._handles: List[AsyncSaveHandle] = []
+        self._sema = threading.BoundedSemaphore(max(1, max_pending))
+        # One writer thread: checkpoints commit in submission order, so the
+        # marker's `latest` is always the newest fully-landed step.
+        self._executor: Optional[ThreadPoolExecutor] = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="ckpt-writer"
+        )
+
+    # -- producer (training thread) -----------------------------------------
+    def save(self, step: int, tree: Any,
+             extra_meta: Optional[dict] = None) -> AsyncSaveHandle:
+        if self._executor is None:
+            raise RuntimeError("AsyncCheckpointer is closed")
+        t0 = time.monotonic()
+        self._sema.acquire()  # backpressure: at most max_pending snapshots
+        try:
+            with trace.span(trace.STAGE_CKPT_SNAPSHOT,
+                            f"snapshot:{self.prefix}-{step}") as sp:
+                flat, treedef = flatten_pytree(tree, copy=True)
+                sp.set_bytes(sum(a.nbytes for a in flat.values()))
+            fut = self._executor.submit(self._write, step, flat, extra_meta,
+                                        treedef)
+        except BaseException:
+            self._sema.release()
+            raise
+        blocked = time.monotonic() - t0
+        self.blocked_s.append(blocked)
+        handle = AsyncSaveHandle(step, fut, blocked)
+        # keep only unsettled and failed-but-unreported handles: the list
+        # must not grow with run length
+        self._handles = [h for h in self._handles
+                         if not h.done() or h.exception() is not None]
+        self._handles.append(handle)
+        return handle
+
+    # -- writer thread -------------------------------------------------------
+    def _write(self, step: int, flat, extra_meta, treedef) -> SaveResult:
+        try:
+            return self.saver.save_flat(step, flat, extra_meta, treedef=treedef)
+        finally:
+            self._sema.release()
+
+    # -- consumer-side API ----------------------------------------------------
+    def wait(self) -> None:
+        """Block until every issued save has committed; raise the first
+        background error (interface parity with the burst buffer).  Settled
+        handles are dropped — an error is reported once, not re-raised by
+        every later ``wait()``."""
+        handles, self._handles = self._handles, []
+        errors = []
+        for h in handles:
+            e = h.exception()  # blocks until this save settles
+            if e is not None:
+                errors.append(e)
+        if errors:
+            raise errors[0]
+
+    def pending(self) -> int:
+        return sum(1 for h in self._handles if not h.done())
+
+    def close(self, wait: bool = True) -> None:
+        if self._executor is not None:
+            self._executor.shutdown(wait=wait)
+            self._executor = None
+
+    # -- restore / introspection (delegate to the saver) ----------------------
+    def restore_pytree(self, skeleton: Any, step: Optional[int] = None) -> Any:
+        return self.saver.restore_pytree(skeleton, step)
+
+    def restore_sharded(self, skeleton, shardings, step=None):
+        return self.saver.restore_sharded(skeleton, shardings, step)
+
+    def latest_step(self) -> Optional[int]:
+        return self.saver.latest_step()

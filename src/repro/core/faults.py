@@ -1,0 +1,164 @@
+"""Fault injection for storage: crash/fail mid-I/O, deterministically.
+
+The checkpoint stack *documents* atomicity ("a crash mid-save leaves the
+previous checkpoint restorable") — this module is how the test suite
+*proves* it.  :class:`FaultyStorage` wraps any :class:`Storage` and injects
+failures at exact, reproducible points:
+
+* ``fail_after(k)`` — the (k+1)-th matching operation (and, because a
+  failed device stays failed, every one after it) raises
+  :class:`FaultInjected`.  ``k=0`` fails the first op.
+* ``fail_on(substring)`` — ops whose path contains ``substring`` fail
+  (e.g. arm on ``"checkpoint"`` to kill exactly the commit-marker write).
+
+``ops`` selects which operation kinds count/trip ("write" covers
+``write_file``/``append_file``, "read" covers ``read_file``/``read_range``;
+metadata ops are never failed — a crashed *device* is modelled by sticky
+write+read failure, not by breaking ``exists``/``listdir`` which restore
+paths legitimately probe).  The injected exception is raised *before* the
+inner operation runs, so a tripped write leaves the target file untouched —
+exactly a process killed between syscalls.
+
+Example — prove a save killed mid-write keeps the previous step::
+
+    faulty = FaultyStorage(storage)
+    saver = CheckpointSaver(faulty, "ckpt/m")
+    saver.save(1, tree)
+    faulty.fail_after(1)                    # 2nd write of the next save dies
+    with pytest.raises(FaultInjected):
+        saver.save(2, tree)
+    faulty.heal()
+    assert saver.latest_step() == 1         # marker never moved
+"""
+from __future__ import annotations
+
+import threading
+from typing import List, Optional, Sequence
+
+from .storage import Storage
+
+
+class FaultInjected(OSError):
+    """The error :class:`FaultyStorage` raises at its trigger point."""
+
+
+_WRITE_OPS = ("write_file", "append_file")
+_READ_OPS = ("read_file", "read_range")
+
+
+class FaultyStorage(Storage):
+    """Transparent :class:`Storage` wrapper with arm-able failure points."""
+
+    def __init__(self, inner: Storage, *, sticky: bool = True):
+        self.inner = inner
+        self.name = f"faulty({getattr(inner, 'name', '?')})"
+        self.sticky = sticky
+        self._lock = threading.Lock()
+        self._fail_after: Optional[int] = None
+        self._fail_substring: Optional[str] = None
+        self._ops: Sequence[str] = _WRITE_OPS
+        self._count = 0
+        self._tripped = False
+        self.op_log: List[tuple] = []  # (op, path, nbytes) of every attempt
+
+    # -- arming ---------------------------------------------------------------
+    def fail_after(self, n_ops: int, ops: Sequence[str] = ("write",)) -> "FaultyStorage":
+        """Let ``n_ops`` matching ops through, then fail."""
+        with self._lock:
+            self._fail_after = int(n_ops)
+            self._ops = self._expand(ops)
+            self._count = 0
+            self._tripped = False
+        return self
+
+    def fail_on(self, substring: str, ops: Sequence[str] = ("write",)) -> "FaultyStorage":
+        """Fail matching ops whose path contains ``substring``."""
+        with self._lock:
+            self._fail_substring = substring
+            self._ops = self._expand(ops)
+            self._tripped = False
+        return self
+
+    def heal(self) -> "FaultyStorage":
+        """Disarm: the device works again (tests assert recovery after)."""
+        with self._lock:
+            self._fail_after = None
+            self._fail_substring = None
+            self._count = 0
+            self._tripped = False
+        return self
+
+    @staticmethod
+    def _expand(ops: Sequence[str]) -> Sequence[str]:
+        out: List[str] = []
+        for o in ops:
+            if o == "write":
+                out.extend(_WRITE_OPS)
+            elif o == "read":
+                out.extend(_READ_OPS)
+            else:
+                out.append(o)
+        return tuple(out)
+
+    # -- trigger --------------------------------------------------------------
+    def _check(self, op: str, path: str, nbytes: int = 0) -> None:
+        with self._lock:
+            self.op_log.append((op, path, nbytes))
+            if op not in self._ops:
+                return
+            if self._tripped and self.sticky:
+                raise FaultInjected(f"injected fault (sticky) on {op}({path!r})")
+            if self._fail_substring is not None and self._fail_substring in path:
+                self._tripped = True
+                raise FaultInjected(
+                    f"injected fault on {op}({path!r}) matching "
+                    f"{self._fail_substring!r}")
+            if self._fail_after is not None:
+                if self._count >= self._fail_after:
+                    self._tripped = True
+                    raise FaultInjected(
+                        f"injected fault on {op}({path!r}) after "
+                        f"{self._count} ops")
+                self._count += 1
+
+    # -- delegated I/O ---------------------------------------------------------
+    def read_file(self, path: str) -> bytes:
+        self._check("read_file", path)
+        return self.inner.read_file(path)
+
+    def read_range(self, path: str, offset: int, length: int) -> bytes:
+        self._check("read_range", path, length)
+        return self.inner.read_range(path, offset, length)
+
+    def write_file(self, path: str, data: bytes, sync: bool = False) -> None:
+        self._check("write_file", path, len(data))
+        self.inner.write_file(path, data, sync=sync)
+
+    def append_file(self, path: str, data: bytes, sync: bool = False) -> None:
+        self._check("append_file", path, len(data))
+        self.inner.append_file(path, data, sync=sync)
+
+    def fsync_dir(self, path: str) -> None:
+        self.inner.fsync_dir(path)
+
+    # -- delegated namespace (never failed) ------------------------------------
+    def listdir(self, path: str) -> List[str]:
+        return self.inner.listdir(path)
+
+    def exists(self, path: str) -> bool:
+        return self.inner.exists(path)
+
+    def makedirs(self, path: str) -> None:
+        self.inner.makedirs(path)
+
+    def remove(self, path: str) -> None:
+        self.inner.remove(path)
+
+    def rename(self, src: str, dst: str) -> None:
+        self.inner.rename(src, dst)
+
+    def size(self, path: str) -> int:
+        return self.inner.size(path)
+
+    def drop_caches(self) -> None:
+        self.inner.drop_caches()

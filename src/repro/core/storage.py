@@ -77,8 +77,20 @@ class Storage:
     def read_file(self, path: str) -> bytes:
         raise NotImplementedError
 
+    def read_range(self, path: str, offset: int, length: int) -> bytes:
+        """Read ``length`` bytes starting at ``offset`` (streaming reads).
+
+        Default implementation slices a full read — subclasses override to
+        avoid materializing the whole file.
+        """
+        return self.read_file(path)[offset : offset + length]
+
     # -- writes ------------------------------------------------------------
     def write_file(self, path: str, data: bytes, sync: bool = False) -> None:
+        raise NotImplementedError
+
+    def append_file(self, path: str, data: bytes, sync: bool = False) -> None:
+        """Append ``data`` to ``path`` (streaming writes; pays write cost)."""
         raise NotImplementedError
 
     def fsync_dir(self, path: str) -> None:
@@ -110,9 +122,27 @@ class Storage:
     def copy_to(self, src_path: str, dst_storage: "Storage", dst_path: str,
                 chunk: int = 8 << 20) -> None:
         """Tier-to-tier copy that pays read cost here and write cost there
-        (used by the burst-buffer drainer)."""
-        data = self.read_file(src_path)
-        dst_storage.write_file(dst_path, data, sync=False)
+        (used by the burst-buffer drainer).
+
+        Streams ``chunk`` bytes at a time through :meth:`read_range` /
+        :meth:`append_file`, so peak memory is one chunk — a multi-GB
+        checkpoint shard never materializes as a single blob.
+        """
+        if chunk <= 0:
+            raise ValueError(f"chunk must be positive, got {chunk}")
+        size = self.size(src_path)
+        if size <= chunk:
+            dst_storage.write_file(dst_path, self.read_file(src_path),
+                                   sync=False)
+            return
+        offset = 0
+        while offset < size:
+            data = self.read_range(src_path, offset, min(chunk, size - offset))
+            if offset == 0:
+                dst_storage.write_file(dst_path, data, sync=False)
+            else:
+                dst_storage.append_file(dst_path, data, sync=False)
+            offset += len(data)
 
 
 class NativeStorage(Storage):
@@ -137,11 +167,33 @@ class NativeStorage(Storage):
             self.tracer.record("read", len(data), path)
         return data
 
+    def read_range(self, path: str, offset: int, length: int) -> bytes:
+        with trace.span(trace.STAGE_STORAGE_READ, path) as sp:
+            with open(self._abs(path), "rb") as f:
+                f.seek(offset)
+                data = f.read(length)
+            sp.set_bytes(len(data))
+        if self.tracer:
+            self.tracer.record("read", len(data), path)
+        return data
+
     def write_file(self, path: str, data: bytes, sync: bool = False) -> None:
         with trace.span(trace.STAGE_STORAGE_WRITE, path, len(data)):
             ap = self._abs(path)
             os.makedirs(os.path.dirname(ap) or ".", exist_ok=True)
             with open(ap, "wb") as f:
+                f.write(data)
+                if sync:
+                    f.flush()
+                    os.fsync(f.fileno())
+        if self.tracer:
+            self.tracer.record("write", len(data), path)
+
+    def append_file(self, path: str, data: bytes, sync: bool = False) -> None:
+        with trace.span(trace.STAGE_STORAGE_WRITE, path, len(data)):
+            ap = self._abs(path)
+            os.makedirs(os.path.dirname(ap) or ".", exist_ok=True)
+            with open(ap, "ab") as f:
                 f.write(data)
                 if sync:
                     f.flush()
@@ -283,6 +335,19 @@ class SimulatedStorage(Storage):
     def _abs(self, path: str) -> str:
         return os.path.join(self.root, path)
 
+    def _pace(self, t0: float, n_inflight: int, nbytes: int,
+              stream_bw: float, bucket: _TokenBucket) -> None:
+        """Sleep until the modelled device would have finished the op: the
+        later of single-stream time (incl. seek) and the shared device-queue
+        slot — real backing-I/O time is credited, so fast tiers aren't
+        penalized by the real disk."""
+        stream_end = t0 + self._seek_latency(n_inflight) + nbytes / (
+            stream_bw / self.time_scale)
+        bucket_end = bucket.reserve(nbytes)
+        delay = max(stream_end, bucket_end) - time.monotonic()
+        if delay > 0:
+            time.sleep(delay)
+
     # -- I/O -----------------------------------------------------------------
     def read_file(self, path: str) -> bytes:
         n = self._enter()
@@ -294,15 +359,25 @@ class SimulatedStorage(Storage):
                 with open(self._abs(path), "rb") as f:
                     data = f.read()
                 sp.set_bytes(len(data))
-                # the op completes at the later of: single-stream time (incl.
-                # seek), shared device-queue time — real backing-I/O time is
-                # credited, so fast tiers aren't penalized by the real disk
-                stream_end = t0 + self._seek_latency(n) + len(data) / (
-                    self.spec.stream_read_bw / self.time_scale)
-                bucket_end = self._read_bucket.reserve(len(data))
-                delay = max(stream_end, bucket_end) - time.monotonic()
-                if delay > 0:
-                    time.sleep(delay)
+                self._pace(t0, n, len(data), self.spec.stream_read_bw,
+                           self._read_bucket)
+            finally:
+                self._exit()
+        if self.tracer:
+            self.tracer.record("read", len(data), path)
+        return data
+
+    def read_range(self, path: str, offset: int, length: int) -> bytes:
+        n = self._enter()
+        t0 = time.monotonic()
+        with trace.span(trace.STAGE_STORAGE_READ, path) as sp:
+            try:
+                with open(self._abs(path), "rb") as f:
+                    f.seek(offset)
+                    data = f.read(length)
+                sp.set_bytes(len(data))
+                self._pace(t0, n, len(data), self.spec.stream_read_bw,
+                           self._read_bucket)
             finally:
                 self._exit()
         if self.tracer:
@@ -322,12 +397,24 @@ class SimulatedStorage(Storage):
                     # *modelled* device time; paying the backing disk's real
                     # fsync would distort every tier with a constant unrelated
                     # to the modelled device.
-                stream_end = t0 + self._seek_latency(n) + len(data) / (
-                    self.spec.stream_write_bw / self.time_scale)
-                bucket_end = self._write_bucket.reserve(len(data))
-                delay = max(stream_end, bucket_end) - time.monotonic()
-                if delay > 0:
-                    time.sleep(delay)
+                self._pace(t0, n, len(data), self.spec.stream_write_bw,
+                           self._write_bucket)
+            finally:
+                self._exit()
+        if self.tracer:
+            self.tracer.record("write", len(data), path)
+
+    def append_file(self, path: str, data: bytes, sync: bool = False) -> None:
+        n = self._enter()
+        t0 = time.monotonic()
+        with trace.span(trace.STAGE_STORAGE_WRITE, path, len(data)):
+            try:
+                ap = self._abs(path)
+                os.makedirs(os.path.dirname(ap) or ".", exist_ok=True)
+                with open(ap, "ab") as f:
+                    f.write(data)
+                self._pace(t0, n, len(data), self.spec.stream_write_bw,
+                           self._write_bucket)
             finally:
                 self._exit()
         if self.tracer:

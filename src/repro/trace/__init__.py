@@ -48,6 +48,7 @@ from .tracer import (
     INPUT_PIPELINE_STAGES,
     NULL_SPAN,
     STAGE_CKPT_RESTORE,
+    STAGE_CKPT_SNAPSHOT,
     STAGE_CKPT_WRITE,
     STAGE_COMPUTE,
     STAGE_DATA_WAIT,
@@ -86,7 +87,8 @@ __all__ = [
     "get_tracer", "set_tracer",
     # stages
     "STAGE_STORAGE_READ", "STAGE_STORAGE_WRITE", "STAGE_DECODE",
-    "STAGE_PREFETCH", "STAGE_CKPT_WRITE", "STAGE_CKPT_RESTORE",
+    "STAGE_PREFETCH", "STAGE_CKPT_SNAPSHOT", "STAGE_CKPT_WRITE",
+    "STAGE_CKPT_RESTORE",
     "STAGE_DRAIN", "STAGE_DATA_WAIT", "STAGE_COMPUTE",
     "INPUT_PIPELINE_STAGES",
     # reports

@@ -35,6 +35,7 @@ STAGE_STORAGE_READ = "storage_read"       # Storage.read_file (incl. device paci
 STAGE_STORAGE_WRITE = "storage_write"     # Storage.write_file
 STAGE_DECODE = "decode"                   # Dataset.map fn (read+decode+resize)
 STAGE_PREFETCH = "prefetch"               # background prefetch-thread fetch
+STAGE_CKPT_SNAPSHOT = "checkpoint_snapshot"  # pytree -> host memory (blocking)
 STAGE_CKPT_WRITE = "checkpoint_write"     # CheckpointSaver.save (serialize+write)
 STAGE_CKPT_RESTORE = "checkpoint_restore" # CheckpointSaver.restore
 STAGE_DRAIN = "bb_drain"                  # burst-buffer background drain

@@ -4,8 +4,16 @@ Integrates the paper's pieces end-to-end:
 
 * data comes through the :mod:`repro.core.dataset` pipeline (parallel map +
   prefetch) and optionally :func:`prefetch_to_device`;
-* checkpoints go through a Direct- or BurstBuffer-checkpointer every
-  ``ckpt_every`` steps (the paper's protocol: §IV-C);
+* checkpoints go through a Direct-, BurstBuffer- or Async-checkpointer every
+  ``ckpt_every`` steps (the paper's protocol: §IV-C).  With an
+  :class:`repro.core.async_checkpoint.AsyncCheckpointer`, ``save()`` returns
+  a future-like handle and the step loop never blocks past the host
+  snapshot; the trainer tracks in-flight handles, re-raises background
+  write failures at the next step boundary and at ``run()`` exit, and
+  blocks on the final preemption save so the checkpoint is durable before
+  stopping.  A save still in flight when ``run()`` returns stays pending —
+  call :meth:`Trainer.wait_for_checkpoints` to drain it and surface any
+  error (the same contract as ``BurstBufferCheckpointer.wait``);
 * **restart**: on construction the trainer restores the newest checkpoint
   if one exists (crash/preemption recovery);
 * **preemption**: SIGTERM triggers checkpoint-and-stop at the next step
@@ -51,6 +59,7 @@ class Trainer:
         self.on_step = on_step
         self.history: List[Dict] = []
         self._stop_requested = False
+        self._pending_saves: List[Any] = []  # AsyncSaveHandle-like objects
         if install_sigterm:
             signal.signal(signal.SIGTERM, self._handle_sigterm)
         if resume and checkpointer is not None:
@@ -94,17 +103,59 @@ class Trainer:
             if self.checkpointer is not None and self.ckpt_every and (
                 step % self.ckpt_every == 0
             ):
-                t3 = time.monotonic()
-                self.checkpointer.save(step, self.state)
-                self.timer.checkpoint_s.append(time.monotonic() - t3)
+                self._save_checkpoint(step)
 
             if self._stop_requested:
                 if self.checkpointer is not None:
-                    t3 = time.monotonic()
-                    self.checkpointer.save(step, self.state)
-                    self.timer.checkpoint_s.append(time.monotonic() - t3)
+                    handle = self._save_checkpoint(step)
+                    if handle is not None:
+                        # preemption save must be durable before we stop
+                        handle.result()
                 break
+        # surface any background write failure that settled during the run
+        # (in-flight saves stay pending: wait_for_checkpoints() drains them)
+        self._reap_saves()
         return self.history
+
+    # -- checkpointing --------------------------------------------------------
+    def _save_checkpoint(self, step: int):
+        """Save; returns the async handle if the checkpointer is async.
+
+        Only the blocking portion (full save for a synchronous
+        checkpointer, host snapshot for an async one) lands in
+        ``timer.checkpoint_s`` — the trainer's view of training-thread
+        blocked time."""
+        self._reap_saves()
+        t3 = time.monotonic()
+        result = self.checkpointer.save(step, self.state)
+        self.timer.checkpoint_s.append(time.monotonic() - t3)
+        if hasattr(result, "done") and hasattr(result, "exception"):
+            self._pending_saves.append(result)
+            return result
+        return None
+
+    def _reap_saves(self) -> None:
+        """Drop completed async saves; re-raise the first background error
+        (a checkpoint that can never land must not fail silently)."""
+        still = []
+        error = None
+        for h in self._pending_saves:
+            if h.done():
+                e = h.exception()
+                if e is not None and error is None:
+                    error = e
+            else:
+                still.append(h)
+        self._pending_saves = still
+        if error is not None:
+            raise error
+
+    def wait_for_checkpoints(self) -> None:
+        """Drain all outstanding checkpoint work (async writes, burst-buffer
+        drains); surfaces any background error."""
+        if self.checkpointer is not None and hasattr(self.checkpointer, "wait"):
+            self.checkpointer.wait()
+        self._pending_saves = []
 
     # -- diagnostics ---------------------------------------------------------
     def report(self) -> Dict[str, Any]:
@@ -120,5 +171,8 @@ class Trainer:
                 list(self.checkpointer.blocked_s)
                 if self.checkpointer is not None and
                 hasattr(self.checkpointer, "blocked_s") else []
+            ),
+            pending_async_saves=sum(
+                1 for h in self._pending_saves if not h.done()
             ),
         )

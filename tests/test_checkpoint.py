@@ -10,7 +10,7 @@ except ModuleNotFoundError:  # bare env (see `test` extra in pyproject.toml)
     from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.checkpoint import (
-    CheckpointSaver, dequantize_blockwise, quantize_blockwise,
+    CheckpointSaver, dequantize_blockwise, quantize_blockwise, resolve_dtype,
 )
 
 
@@ -53,6 +53,41 @@ class TestRoundtrip:
         saver.save(2, t2)
         old = saver.restore_pytree(t, step=1)
         np.testing.assert_array_equal(old["embed"], t["embed"])
+
+
+class TestExtensionDtypes:
+    def test_resolve_dtype_builtin_and_extension(self):
+        assert resolve_dtype("float32") == np.dtype(np.float32)
+        import ml_dtypes
+        assert resolve_dtype("bfloat16") == np.dtype(ml_dtypes.bfloat16)
+        with pytest.raises(TypeError):
+            resolve_dtype("not_a_dtype")
+
+    def test_bfloat16_roundtrip(self, tmp_storage):
+        """Restore of bfloat16 leaves must not depend on np.dtype('bfloat16')
+        being registered (it raises unless ml_dtypes was imported)."""
+        import jax.numpy as jnp
+
+        t = {"w": jnp.arange(64, dtype=jnp.bfloat16).reshape(8, 8),
+             "b": np.ones(8, np.float32)}
+        saver = CheckpointSaver(tmp_storage, "ckpt/m", n_shards=2)
+        saver.save(1, t)
+        out = saver.restore_pytree(t)
+        assert str(out["w"].dtype) == "bfloat16"
+        np.testing.assert_array_equal(
+            np.asarray(out["w"], np.float32), np.asarray(t["w"], np.float32))
+
+    def test_bfloat16_quantized_save_does_not_crash(self, tmp_storage):
+        import jax.numpy as jnp
+
+        t = {"w": jnp.ones((512,), jnp.bfloat16)}
+        saver = CheckpointSaver(tmp_storage, "ckpt/m", quantize="int8")
+        saver.save(1, t)
+        out = saver.restore_pytree(t)
+        assert str(out["w"].dtype) == "bfloat16"
+        np.testing.assert_allclose(
+            np.asarray(out["w"], np.float32), np.ones(512, np.float32),
+            atol=0.02)
 
 
 class TestRetention:

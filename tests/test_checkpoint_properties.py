@@ -1,0 +1,117 @@
+"""Property-based checkpoint tests (hypothesis, with the bare-env shim).
+
+* save→restore identity across dtypes / shapes / shard counts / io_threads
+  (bit-exact, including extension dtypes via ml_dtypes);
+* quantize_blockwise/dequantize_blockwise error bounds, including the
+  pad path (size not a multiple of the block) and all-zero blocks.
+"""
+import tempfile
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # bare env (see `test` extra in pyproject.toml)
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core.checkpoint import (
+    CheckpointSaver, dequantize_blockwise, quantize_blockwise, resolve_dtype,
+)
+from repro.core.storage import NativeStorage
+
+_QBLOCK = 256
+
+DTYPES = ("float32", "float64", "int32", "int8", "uint8", "bool", "bfloat16")
+
+
+def _random_array(rng: np.random.Generator, shape, dtype_name: str):
+    dtype = resolve_dtype(dtype_name)
+    if dtype_name == "bool":
+        return rng.integers(0, 2, size=shape).astype(bool)
+    if np.issubdtype(dtype, np.integer):
+        info = np.iinfo(dtype)
+        return rng.integers(info.min, info.max, size=shape,
+                            endpoint=True).astype(dtype)
+    return (rng.normal(size=shape) * 100).astype(dtype)
+
+
+class TestRoundtripIdentity:
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n_shards=st.integers(1, 4),
+        io_threads=st.integers(1, 4),
+        dtype=st.sampled_from(DTYPES),
+        n_leaves=st.integers(1, 5),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_save_restore_identity(self, seed, n_shards, io_threads, dtype,
+                                   n_leaves):
+        rng = np.random.default_rng(seed)
+        shapes = [
+            tuple(int(d) for d in rng.integers(1, 24, size=rng.integers(0, 4)))
+            for _ in range(n_leaves)
+        ]
+        tree = {f"leaf{i}": _random_array(rng, shp, dtype)
+                for i, shp in enumerate(shapes)}
+        with tempfile.TemporaryDirectory() as d:
+            saver = CheckpointSaver(NativeStorage(d), "ckpt/m",
+                                    n_shards=n_shards, io_threads=io_threads)
+            saver.save(1, tree)
+            out = saver.restore_pytree(tree)
+        for k in tree:
+            assert str(out[k].dtype) == str(tree[k].dtype)
+            assert out[k].shape == tree[k].shape
+            np.testing.assert_array_equal(
+                np.asarray(out[k], dtype=np.float64) if dtype == "bfloat16"
+                else out[k],
+                np.asarray(tree[k], dtype=np.float64) if dtype == "bfloat16"
+                else tree[k])
+
+
+class TestQuantizeProperties:
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        size=st.integers(1, 4 * _QBLOCK + 17),
+        scale_exp=st.floats(-3.0, 3.0),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_error_bound_incl_pad_path(self, seed, size, scale_exp):
+        """|x - dq(q(x))| <= absmax_block/127 * 0.5 (+eps), any size — the
+        pad path (size % 256 != 0) must round-trip shape exactly."""
+        rng = np.random.default_rng(seed)
+        x = (rng.normal(size=(size,)) * (10.0 ** scale_exp)).astype(np.float32)
+        q, scale, pad = quantize_blockwise(x)
+        assert (len(x) + pad) % _QBLOCK == 0
+        back = dequantize_blockwise(q, scale, pad, x.shape, np.float32)
+        assert back.shape == x.shape
+        padded_x = np.pad(x, (0, pad)).reshape(-1, _QBLOCK)
+        bound = np.abs(padded_x).max(axis=1, keepdims=True) / 127.0 * 0.5 + 1e-7
+        err = np.abs(padded_x - np.pad(back, (0, pad)).reshape(-1, _QBLOCK))
+        assert (err <= bound + 1e-6).all()
+
+    @given(
+        n_blocks=st.integers(1, 4),
+        tail=st.integers(0, _QBLOCK - 1),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_all_zero_blocks_roundtrip_exactly(self, n_blocks, tail):
+        """scale==0 blocks must not divide by zero and must come back as
+        exact zeros."""
+        x = np.zeros(n_blocks * _QBLOCK + tail, np.float32)
+        q, scale, pad = quantize_blockwise(x)
+        assert np.isfinite(scale).all() and (q == 0).all()
+        back = dequantize_blockwise(q, scale, pad, x.shape, np.float32)
+        np.testing.assert_array_equal(back, x)
+
+    @given(seed=st.integers(0, 2**31 - 1), zero_block=st.integers(0, 3))
+    @settings(max_examples=20, deadline=None)
+    def test_mixed_zero_and_data_blocks(self, seed, zero_block):
+        """An all-zero block embedded among data blocks stays exactly zero."""
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(4, _QBLOCK)).astype(np.float32)
+        x[zero_block] = 0.0
+        flat = x.reshape(-1)
+        q, scale, pad = quantize_blockwise(flat)
+        back = dequantize_blockwise(q, scale, pad, flat.shape, np.float32)
+        np.testing.assert_array_equal(
+            back.reshape(4, _QBLOCK)[zero_block], np.zeros(_QBLOCK))

@@ -1,0 +1,203 @@
+"""Fault injection & crash consistency: the atomicity guarantees, proven.
+
+Every checkpointer documents "a crash mid-save leaves the previous
+checkpoint restorable" — these tests kill the storage at exact points
+(before the commit marker, on the marker itself, during the drain) with
+:class:`FaultyStorage` and assert the previous step survives on every path:
+CheckpointSaver, AsyncCheckpointer, and both tiers of
+BurstBufferCheckpointer.
+"""
+import numpy as np
+import pytest
+
+from repro.core.async_checkpoint import AsyncCheckpointer
+from repro.core.burst_buffer import BurstBufferCheckpointer
+from repro.core.checkpoint import CheckpointSaver
+from repro.core.faults import FaultInjected, FaultyStorage
+
+
+def tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": rng.normal(size=(64, 64)).astype(np.float32),
+        "b": rng.normal(size=(64,)).astype(np.float32),
+        "step": np.int32(seed),
+    }
+
+
+class TestFaultyStorage:
+    def test_fail_after_counts_writes(self, tmp_storage):
+        f = FaultyStorage(tmp_storage).fail_after(2)
+        f.write_file("a", b"1")
+        f.write_file("b", b"2")
+        with pytest.raises(FaultInjected):
+            f.write_file("c", b"3")
+        assert tmp_storage.exists("a") and tmp_storage.exists("b")
+        assert not tmp_storage.exists("c")  # fault fires before the write
+
+    def test_sticky_failure_models_dead_device(self, tmp_storage):
+        f = FaultyStorage(tmp_storage).fail_after(0)
+        with pytest.raises(FaultInjected):
+            f.write_file("a", b"1")
+        with pytest.raises(FaultInjected):  # still dead
+            f.write_file("b", b"2")
+        f.heal()
+        f.write_file("c", b"3")
+        assert f.read_file("c") == b"3"
+
+    def test_fail_on_path_substring(self, tmp_storage):
+        f = FaultyStorage(tmp_storage).fail_on("marker")
+        f.write_file("data-0", b"x")
+        with pytest.raises(FaultInjected):
+            f.write_file("the/marker", b"y")
+
+    def test_read_faults(self, tmp_storage):
+        tmp_storage.write_file("a", b"payload")
+        f = FaultyStorage(tmp_storage).fail_after(0, ops=("read",))
+        f.write_file("b", b"ok")  # writes unaffected
+        with pytest.raises(FaultInjected):
+            f.read_file("a")
+        with pytest.raises(FaultInjected):
+            f.read_range("a", 0, 3)
+
+
+class TestSaverCrashConsistency:
+    def test_crash_on_data_shard_keeps_previous(self, tmp_storage):
+        faulty = FaultyStorage(tmp_storage)
+        saver = CheckpointSaver(faulty, "ckpt/m", n_shards=2)
+        t1 = tree(1)
+        saver.save(1, t1)
+        faulty.fail_after(0)  # first write of the next save dies
+        with pytest.raises(FaultInjected):
+            saver.save(2, tree(2))
+        faulty.heal()
+        assert saver.latest_step() == 1  # marker never moved
+        out = saver.restore_pytree(t1)
+        np.testing.assert_array_equal(out["w"], t1["w"])
+
+    def test_crash_on_marker_write_keeps_previous(self, tmp_storage):
+        faulty = FaultyStorage(tmp_storage)
+        saver = CheckpointSaver(faulty, "ckpt/m")
+        t1 = tree(1)
+        saver.save(1, t1)
+        faulty.fail_on("ckpt/checkpoint")  # kill exactly the commit
+        with pytest.raises(FaultInjected):
+            saver.save(2, tree(2))
+        faulty.heal()
+        # step-2 data landed but was never committed: previous still latest
+        assert saver.latest_step() == 1
+        out = saver.restore_pytree(t1)
+        np.testing.assert_array_equal(out["w"], t1["w"])
+
+    def test_crash_with_parallel_shard_writes(self, tmp_storage):
+        """A failing shard aborts the whole save before the marker, even
+        with the other shards written concurrently."""
+        faulty = FaultyStorage(tmp_storage)
+        saver = CheckpointSaver(faulty, "ckpt/m", n_shards=4, io_threads=4)
+        t1 = tree(1)
+        saver.save(1, t1)
+        faulty.fail_after(2)  # third shard write of the next save dies
+        with pytest.raises(FaultInjected):
+            saver.save(2, tree(2))
+        faulty.heal()
+        assert saver.latest_step() == 1
+        out = saver.restore_pytree(t1)
+        np.testing.assert_array_equal(out["w"], t1["w"])
+
+
+class TestAsyncCrashConsistency:
+    def test_wait_surfaces_background_write_error(self, tmp_storage):
+        faulty = FaultyStorage(tmp_storage)
+        ac = AsyncCheckpointer(faulty, "ckpt/m")
+        t1 = tree(1)
+        ac.save(1, t1).result()
+        faulty.fail_after(0)
+        handle = ac.save(2, tree(2))  # snapshot succeeds; write will die
+        assert isinstance(handle.exception(), FaultInjected)
+        with pytest.raises(FaultInjected):
+            ac.wait()
+        faulty.heal()
+        assert ac.latest_step() == 1
+        out = ac.restore_pytree(t1)
+        np.testing.assert_array_equal(out["w"], t1["w"])
+        ac.close()
+
+    def test_error_reported_once_not_resurfaced_forever(self, tmp_storage):
+        """After a failed save is reported by wait(), a healed device and
+        successful later saves must make wait() clean again."""
+        faulty = FaultyStorage(tmp_storage)
+        ac = AsyncCheckpointer(faulty, "ckpt/m")
+        faulty.fail_after(0)
+        ac.save(1, tree(1))
+        with pytest.raises(FaultInjected):
+            ac.wait()
+        faulty.heal()
+        ac.save(2, tree(2))
+        ac.wait()  # must not re-raise the stale step-1 error
+        assert ac.latest_step() == 2
+        ac.close()
+
+
+class TestBurstBufferCrashConsistency:
+    def test_fast_tier_crash_mid_save_keeps_previous(self, fast_slow_storage):
+        fast, slow = fast_slow_storage
+        faulty_fast = FaultyStorage(fast)
+        bb = BurstBufferCheckpointer(faulty_fast, slow, "ckpt/m")
+        t1 = tree(1)
+        bb.save(1, t1)
+        bb.wait()
+        faulty_fast.fail_after(0)
+        with pytest.raises(FaultInjected):
+            bb.save(2, tree(2))
+        faulty_fast.heal()
+        bb.wait()
+        # both tiers still restore step 1
+        out = bb.restore_pytree(t1)
+        np.testing.assert_array_equal(out["w"], t1["w"])
+        slow_saver = CheckpointSaver(slow, "ckpt/m")
+        assert slow_saver.latest_step() == 1
+        out = slow_saver.restore_pytree(t1)
+        np.testing.assert_array_equal(out["w"], t1["w"])
+        bb.close()
+
+    def test_drain_error_surfaces_in_wait_and_slow_tier_consistent(
+            self, fast_slow_storage):
+        fast, slow = fast_slow_storage
+        faulty_slow = FaultyStorage(slow)
+        bb = BurstBufferCheckpointer(fast, faulty_slow, "ckpt/m")
+        t1 = tree(1)
+        bb.save(1, t1)
+        bb.wait()
+        faulty_slow.fail_after(0)  # the next drain's first slow write dies
+        bb.save(2, tree(2))        # staging to fast succeeds
+        with pytest.raises(FaultInjected):
+            bb.wait()
+        faulty_slow.heal()
+        # slow tier: marker still at step 1, and step 1 restores
+        slow_saver = CheckpointSaver(slow, "ckpt/m")
+        assert slow_saver.latest_step() == 1
+        out = slow_saver.restore_pytree(t1)
+        np.testing.assert_array_equal(out["w"], t1["w"])
+        # fast tier holds the newer staged step — nothing was lost
+        assert bb.fast_saver.latest_step() == 2
+        bb.close()
+
+    def test_drain_marker_crash_keeps_slow_consistent(self, fast_slow_storage):
+        """Die exactly on the slow-tier commit marker: files of the new step
+        are on the slow tier but it must still restore the previous step."""
+        fast, slow = fast_slow_storage
+        faulty_slow = FaultyStorage(slow)
+        bb = BurstBufferCheckpointer(fast, faulty_slow, "ckpt/m")
+        t1 = tree(1)
+        bb.save(1, t1)
+        bb.wait()
+        faulty_slow.fail_on("ckpt/checkpoint")
+        bb.save(2, tree(2))
+        with pytest.raises(FaultInjected):
+            bb.wait()
+        faulty_slow.heal()
+        slow_saver = CheckpointSaver(slow, "ckpt/m")
+        assert slow_saver.latest_step() == 1
+        out = slow_saver.restore_pytree(t1)
+        np.testing.assert_array_equal(out["w"], t1["w"])
+        bb.close()

@@ -9,7 +9,7 @@ import pytest
 
 from repro.core.stats import IOTracer
 from repro.core.storage import (
-    NativeStorage, SimulatedStorage, TIERS, TierSpec, make_storage,
+    NativeStorage, SimulatedStorage, Storage, TIERS, TierSpec, make_storage,
 )
 
 
@@ -88,6 +88,103 @@ class TestSimulated:
     def test_unknown_kind_raises(self):
         with pytest.raises(ValueError):
             make_storage("floppy", "/tmp/x")
+
+
+class _HugeSyntheticSource(Storage):
+    """Models a huge file without backing bytes: read_range synthesizes the
+    requested window.  Lets the chunked-copy test stream a multi-GB-modeled
+    blob through real code paths in milliseconds of RAM."""
+
+    def __init__(self, size: int):
+        self._size = size
+        self.max_read = 0
+
+    def size(self, path: str) -> int:
+        return self._size
+
+    def read_file(self, path: str) -> bytes:
+        raise AssertionError(
+            "full-blob read of a multi-GB-modeled file — copy_to must stream")
+
+    def read_range(self, path: str, offset: int, length: int) -> bytes:
+        length = min(length, self._size - offset)
+        self.max_read = max(self.max_read, length)
+        return bytes((offset + i) & 0xFF for i in range(min(length, 64))) \
+            + b"\x00" * max(0, length - 64)
+
+
+class _SinkSpy(Storage):
+    """Write sink recording per-op buffer sizes (nothing hits disk)."""
+
+    def __init__(self):
+        self.total = 0
+        self.max_write = 0
+        self.ops = []
+
+    def write_file(self, path: str, data: bytes, sync: bool = False) -> None:
+        self.ops.append(("write", len(data)))
+        self.total += len(data)
+        self.max_write = max(self.max_write, len(data))
+
+    def append_file(self, path: str, data: bytes, sync: bool = False) -> None:
+        self.ops.append(("append", len(data)))
+        self.total += len(data)
+        self.max_write = max(self.max_write, len(data))
+
+
+class TestChunkedCopy:
+    def test_copy_never_materializes_full_blob(self):
+        """Regression: copy_to used to read the whole file into memory,
+        ignoring its chunk parameter.  A 4 GiB-modeled copy must stream in
+        chunk-sized buffers."""
+        size = 4 << 30  # 4 GiB modeled
+        chunk = 8 << 20
+        src = _HugeSyntheticSource(size)
+        dst = _SinkSpy()
+        src.copy_to("big", dst, "big", chunk=chunk)
+        assert dst.total == size
+        assert src.max_read <= chunk, f"read {src.max_read} > chunk {chunk}"
+        assert dst.max_write <= chunk, f"wrote {dst.max_write} > chunk {chunk}"
+        assert dst.ops[0][0] == "write" and all(
+            op == "append" for op, _ in dst.ops[1:])
+
+    def test_chunked_copy_content_exact(self, tmp_storage):
+        with tempfile.TemporaryDirectory() as d2:
+            dst = NativeStorage(d2)
+            rng = np.random.default_rng(0)
+            data = rng.integers(0, 256, size=1_000_003, dtype=np.uint8).tobytes()
+            tmp_storage.write_file("src.bin", data)
+            tmp_storage.copy_to("src.bin", dst, "dst.bin", chunk=64 << 10)
+            assert dst.read_file("dst.bin") == data
+
+    def test_small_file_single_write(self, tmp_storage):
+        dst = _SinkSpy()
+        tmp_storage.write_file("s.bin", b"abc")
+        tmp_storage.copy_to("s.bin", dst, "s.bin", chunk=1 << 20)
+        assert dst.ops == [("write", 3)]
+
+    def test_read_range_and_append(self, tmp_storage):
+        tmp_storage.write_file("f", b"0123456789")
+        assert tmp_storage.read_range("f", 2, 4) == b"2345"
+        tmp_storage.append_file("f", b"AB")
+        assert tmp_storage.read_file("f") == b"0123456789AB"
+        assert tmp_storage.size("f") == 12
+
+    def test_simulated_read_range_and_append_paced(self):
+        spec = TierSpec("slow", 10e6, 10e6, 10e6, 10e6, 0, 0)
+        with tempfile.TemporaryDirectory() as d:
+            st = SimulatedStorage(d, spec)
+            st.write_file("f", b"x" * 1_000_000)
+            t0 = time.monotonic()
+            part = st.read_range("f", 0, 1_000_000)  # 1MB at 10MB/s >= 0.1s
+            el = time.monotonic() - t0
+            assert len(part) == 1_000_000
+            assert el >= 0.08, f"read_range not paced: {el}"
+            t0 = time.monotonic()
+            st.append_file("f", b"y" * 1_000_000)
+            el = time.monotonic() - t0
+            assert el >= 0.08, f"append_file not paced: {el}"
+            assert st.size("f") == 2_000_000
 
 
 class TestTracerTimeline:
