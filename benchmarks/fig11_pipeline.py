@@ -1,0 +1,133 @@
+"""Fig. 11 (ours): legacy per-file ingestion vs the vectorized read engine.
+
+Same images, same simulated tier, three pipelines:
+
+* ``legacy``     — seed path: one single-image ``.rrf`` per element,
+  per-element map -> ignore_errors -> batch (per-image seek + copy chain);
+* ``vectorized`` — same per-file corpus through the fused ``map_and_batch``
+  (zero-copy decode, LUT resize into the batch buffer);
+* ``sharded``    — multi-record shards streamed by ``interleave`` (one
+  sequential read per shard) + fused map_and_batch.
+
+Emits the usual CSV rows plus machine-readable ``BENCH_pipeline.json``
+(samples/s and bytes/s per thread count per pipeline) so CI accumulates a
+perf trajectory.  Acceptance: sharded >= 2x legacy samples/s at the sweep's
+top thread count, and bandwidth monotone in threads.
+
+    PYTHONPATH=src python -m benchmarks.fig11_pipeline [--smoke]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+from repro.core import make_storage, records
+from repro.core.microbench import run_microbench, run_sharded_microbench, \
+    thread_scaling_sweep
+
+from .common import RESULTS_DIR, SCRATCH, emit
+
+# Like fig4: real-time pacing (time_scale=1.0), so the modelled device —
+# not this 1-core box's Python cost — dominates and thread scaling is the
+# device's.  hdd's 8 ms seek per file is exactly the per-image tax the
+# sharded layout amortizes.
+TIME_SCALE = 1.0
+
+
+def run(tier="hdd", n_images=128, images_per_shard=16, mean_hw=(96, 96),
+        out_hw=(32, 32), thread_counts=(1, 2, 4, 8), batch_size=32,
+        repeats=3, name="fig11_pipeline", json_path=None) -> dict:
+    with tempfile.TemporaryDirectory(dir=SCRATCH) as tmp:
+        st = make_storage(tier, os.path.join(tmp, tier),
+                          time_scale=TIME_SCALE)
+        file_paths, _ = records.write_image_dataset(
+            st, n_images, mean_hw=mean_hw, seed=0, prefix="img")
+        shard_paths, _ = records.write_sharded_image_dataset(
+            st, n_images, images_per_shard, mean_hw=mean_hw, seed=0,
+            prefix="shard")
+        st.drop_caches()
+
+        sweeps = {
+            "legacy": thread_scaling_sweep(
+                st, file_paths, thread_counts=thread_counts, repeats=repeats,
+                batch_size=batch_size, out_hw=out_hw, pipeline="legacy"),
+            "vectorized": thread_scaling_sweep(
+                st, file_paths, thread_counts=thread_counts, repeats=repeats,
+                batch_size=batch_size, out_hw=out_hw, pipeline="vectorized"),
+            "sharded": thread_scaling_sweep(
+                st, shard_paths, thread_counts=thread_counts, repeats=repeats,
+                batch_size=batch_size, out_hw=out_hw,
+                bench=run_sharded_microbench),
+        }
+
+    rows, result = [], {}
+    for pipeline, runs in sweeps.items():
+        per_threads = {}
+        for r in runs:
+            per_threads[str(r.threads)] = {
+                "samples_per_s": round(r.images_per_s, 2),
+                "bytes_per_s": round(r.total_bytes / r.seconds, 1),
+            }
+            rows.append(
+                f"{tier},pipeline={pipeline},threads={r.threads},"
+                f"img_s={r.images_per_s:.1f},mb_s={r.mb_per_s:.2f}")
+        result[pipeline] = per_threads
+
+    top = str(max(thread_counts))
+    speedup = (result["sharded"][top]["samples_per_s"]
+               / result["legacy"][top]["samples_per_s"])
+
+    def monotone(pipeline):
+        bw = [result[pipeline][str(t)]["bytes_per_s"] for t in thread_counts]
+        return all(b2 >= b1 * 0.95 for b1, b2 in zip(bw, bw[1:]))
+
+    # fig4/fig5 trend preservation is a per-file-pipeline property: with
+    # n_images files, threads monotonically hide per-file seeks.  The
+    # sharded engine has only n_images/images_per_shard streams and is
+    # near-saturated from 1 thread — its curve is reported, not gated.
+    mono = {p: monotone(p) for p in result}
+    derived = (f"sharded-vs-legacy speedup @{top}T = {speedup:.2f}x "
+               f"(target >=2x); bandwidth monotone in threads: "
+               f"legacy={mono['legacy']} vectorized={mono['vectorized']} "
+               f"sharded(saturated)={mono['sharded']}")
+    emit(name, rows, derived)
+
+    payload = {
+        "benchmark": name,
+        "tier": tier,
+        "config": {
+            "n_images": n_images, "images_per_shard": images_per_shard,
+            "mean_hw": list(mean_hw), "out_hw": list(out_hw),
+            "batch_size": batch_size, "time_scale": TIME_SCALE,
+            "thread_counts": list(thread_counts), "repeats": repeats,
+        },
+        "pipelines": result,
+        "speedup_sharded_vs_legacy": round(speedup, 3),
+        "bandwidth_monotone": mono,
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out_json = json_path or os.path.join(RESULTS_DIR, "BENCH_pipeline.json")
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {out_json}")
+    return payload
+
+
+def run_smoke() -> dict:
+    """Tiny-scale CI variant: same shape of output, seconds of runtime."""
+    return run(n_images=32, images_per_shard=8, mean_hw=(48, 48),
+               out_hw=(16, 16), thread_counts=(1, 2), batch_size=8,
+               repeats=1)
+
+
+if __name__ == "__main__":
+    payload = run_smoke() if "--smoke" in sys.argv else run()
+    ok = payload["speedup_sharded_vs_legacy"] >= (
+        1.2 if "--smoke" in sys.argv else 2.0)
+    print(f"# speedup={payload['speedup_sharded_vs_legacy']}x ok={ok}")
+    if not ok:
+        sys.exit(1)

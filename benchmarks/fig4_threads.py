@@ -8,8 +8,11 @@ from .common import BenchEnv, emit
 
 
 def run(tiers=("hdd", "ssd", "optane", "lustre"), preprocess=True,
-        name="fig4_threads") -> dict:
-    # paper: ImageNet subset, median image 112 KB (~190x190x3 raw)
+        name="fig4_threads", pipeline="legacy") -> dict:
+    # paper: ImageNet subset, median image 112 KB (~190x190x3 raw).
+    # ``pipeline="vectorized"`` sweeps the fused map_and_batch read engine
+    # instead of the seed per-element chain (thread-scaling shape should
+    # match; absolute samples/s is higher — fig11 quantifies the gap).
     env = BenchEnv(tiers=tiers, n_images=128, mean_hw=(190, 190),
                    time_scale=1.0)
     rows, speedups = [], {}
@@ -19,7 +22,8 @@ def run(tiers=("hdd", "ssd", "optane", "lustre"), preprocess=True,
         st.drop_caches()
         results = thread_scaling_sweep(
             st, paths, thread_counts=(1, 2, 4, 8), repeats=3,
-            batch_size=32, preprocess=preprocess, out_hw=(32, 32))
+            batch_size=32, preprocess=preprocess, out_hw=(32, 32),
+            pipeline=pipeline)
         base = results[0].images_per_s
         sp = {r.threads: r.images_per_s / base for r in results}
         speedups[tier] = sp

@@ -1,5 +1,7 @@
 """Fig. 5 analogue: pipeline with ONLY tf.read() (no decode/resize) —
-isolates preprocessing cost from raw I/O."""
+isolates preprocessing cost from raw I/O.  The read-only loader is shared
+by both pipeline generations (the vectorized engine only changes decode/
+batch), so one sweep covers both."""
 from __future__ import annotations
 
 from . import fig4_threads

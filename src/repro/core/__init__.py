@@ -1,7 +1,11 @@
 """repro.core — the paper's contribution: DL I/O as a first-class subsystem.
 
-* :mod:`repro.core.dataset` — tf.data-like input pipeline (shuffle / parallel
-  map / batch / prefetch / cache / ignore_errors).
+* :mod:`repro.core.dataset` — tf.data-like input pipeline (shuffle / shard /
+  parallel map / interleave / fused map_and_batch / batch / prefetch /
+  cache / ignore_errors), with closeable iterators end-to-end.
+* :mod:`repro.core.readerpool` — the shared, lazily-sized reader thread
+  pool every parallel pipeline stage schedules onto (grown once, reused
+  across epochs and stages).
 * :mod:`repro.core.prefetcher` — background-thread prefetcher + device
   double-buffering.
 * :mod:`repro.core.records` — record container + image payloads + decode.
@@ -28,8 +32,9 @@ tf-Darshan-style subsystem.  Tracing is off by default; call
 ``repro.trace.dump_chrome_trace`` (Perfetto) or summarize with
 ``repro.trace.to_markdown``.
 """
-from .dataset import Dataset, image_pipeline
+from .dataset import Dataset, image_pipeline, sharded_image_pipeline
 from .prefetcher import PrefetchIterator, prefetch_to_device
+from .readerpool import ReaderPool, reader_pool
 from .storage import Storage, NativeStorage, SimulatedStorage, TIERS, make_storage
 from .checkpoint import CheckpointSaver
 from .async_checkpoint import AsyncCheckpointer, AsyncSaveHandle
@@ -38,7 +43,8 @@ from .faults import FaultInjected, FaultyStorage
 from .stats import IOTracer, StepTimer
 
 __all__ = [
-    "Dataset", "image_pipeline", "PrefetchIterator", "prefetch_to_device",
+    "Dataset", "image_pipeline", "sharded_image_pipeline",
+    "PrefetchIterator", "prefetch_to_device", "ReaderPool", "reader_pool",
     "Storage", "NativeStorage", "SimulatedStorage", "TIERS", "make_storage",
     "CheckpointSaver", "AsyncCheckpointer", "AsyncSaveHandle",
     "BurstBufferCheckpointer", "DirectCheckpointer",

@@ -2,39 +2,62 @@
 
 The pipeline is a chain of lazily-evaluated nodes::
 
-    Dataset.from_tensor_slices(paths)
+    Dataset.list_files(storage).shard(n_workers, rank)
         .shuffle(buffer_size, seed)
-        .map(read_and_decode, num_parallel_calls=8)   # thread-pool I/O
-        .ignore_errors()
-        .batch(64)
+        .interleave(stream_shard, cycle_length=8,      # parallel shard streaming
+                    block_length=16, num_parallel_calls=8)
+        .map_and_batch(decode_into, 64,                # fused decode-into-buffer
+                       num_parallel_calls=8)
         .prefetch(1)                                   # background thread
 
 Semantics follow the paper's description of the TF Dataset API:
 
-* ``map(num_parallel_calls=k)`` keeps ``k`` elements in flight on a thread
-  pool.  ``deterministic=True`` (default) yields results in input order —
-  like TF — by maintaining a window of futures; ``False`` yields in
-  completion order (lower latency jitter, used for straggler mitigation).
+* ``map(num_parallel_calls=k)`` keeps ``k`` elements in flight on the shared
+  :class:`~repro.core.readerpool.ReaderPool`.  ``deterministic=True``
+  (default) yields results in input order — like TF — by maintaining a
+  window of futures; ``False`` yields in completion order via
+  ``wait(FIRST_COMPLETED)`` (lower latency jitter, straggler mitigation).
+* ``interleave`` is tf.data's ``parallel_interleave``: ``cycle_length``
+  input elements are expanded to sub-streams consumed round-robin,
+  ``block_length`` elements at a time; with ``num_parallel_calls`` the next
+  block of each cycle slot is fetched on the reader pool while earlier
+  slots' blocks are being consumed.  Output order is deterministic
+  (independent of thread timing).
+* ``map_and_batch`` is the fused tf.contrib path: elements decode directly
+  into a preallocated ``(batch, *out_shape)`` buffer — no per-element
+  ``np.asarray`` + ``np.stack`` — with error slots refilled from upstream
+  when ``ignore_errors=True``.
+* ``shard(n, i)`` keeps every n-th element (multi-worker data sharding).
 * ``shuffle`` is TF's streaming buffer shuffle: fill a ``buffer_size``
   reservoir, emit a uniformly random element, refill.
-* ``batch`` stacks ``n`` consecutive elements (pytree-aware).
+* ``batch`` stacks ``n`` consecutive elements (pytree-aware) with one
+  allocation per batch.
 * ``prefetch`` inserts the background-thread prefetcher (see prefetcher.py).
 * ``cache`` memoizes the upstream stream in host memory after epoch 1
   (paper §IV-B: "after the first epoch all samples ... cached in memory").
 * ``ignore_errors`` drops elements whose map fn raised (tf.contrib.data.
   ignore_errors), so corrupt records don't kill a large run.
+
+Iterators are closeable end-to-end: ``iter(ds)`` returns an iterator whose
+``close()`` propagates through every node down to prefetcher background
+threads and in-flight reader-pool futures, so an abandoned pipeline releases
+its resources immediately instead of waiting for GC.
 """
 from __future__ import annotations
 
+import itertools
 import random
 import threading
-from concurrent.futures import ThreadPoolExecutor
+from collections import deque
+from concurrent.futures import FIRST_COMPLETED, Future
+from concurrent.futures import wait as futures_wait
 from typing import Any, Callable, Iterable, Iterator, List, Optional, Sequence
 
 import numpy as np
 
 from .. import trace
 from .prefetcher import PrefetchIterator
+from .readerpool import reader_pool
 
 
 class _ErrorMarker:
@@ -47,11 +70,65 @@ class _ErrorMarker:
         self.exc = exc
 
 
-def _raising(it: Iterator) -> Iterator:
-    for item in it:
+def _close_iter(it: Any) -> None:
+    """Propagate close to any iterator that supports it (generators,
+    PrefetchIterator, _RaisingIterator)."""
+    close = getattr(it, "close", None)
+    if close is not None:
+        close()
+
+
+class _RaisingIterator:
+    """Terminal iterator: unwraps :class:`_ErrorMarker` into raises and
+    forwards ``close()`` up the node chain."""
+
+    __slots__ = ("_it",)
+
+    def __init__(self, it: Iterator):
+        self._it = it
+
+    def __iter__(self) -> "_RaisingIterator":
+        return self
+
+    def __next__(self) -> Any:
+        item = next(self._it)
         if isinstance(item, _ErrorMarker):
             raise item.exc
-        yield item
+        return item
+
+    def close(self) -> None:
+        _close_iter(self._it)
+
+    def __enter__(self) -> "_RaisingIterator":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def _raising(it: Iterator) -> Iterator:
+    return _RaisingIterator(it)
+
+
+def _take_future(window: List[Future], deterministic: bool) -> Future:
+    """Next future to consume: input order, or first-completed order."""
+    if deterministic or len(window) == 1:
+        return window.pop(0)
+    done, _ = futures_wait(window, return_when=FIRST_COMPLETED)
+    for i, f in enumerate(window):
+        if f in done:
+            return window.pop(i)
+    return window.pop(0)  # unreachable: wait() returned at least one
+
+
+class _InterleaveSlot:
+    """One cycle slot: an input element and its lazily-opened sub-iterator."""
+
+    __slots__ = ("item", "it")
+
+    def __init__(self, item: Any):
+        self.item = item
+        self.it: Optional[Iterator] = None
 
 
 class Dataset:
@@ -68,7 +145,10 @@ class Dataset:
 
     @staticmethod
     def list_files(storage, dirpath: str = ".", suffix: str = ".rrf") -> "Dataset":
-        names = [n for n in storage.listdir(dirpath) if n.endswith(suffix)]
+        # sorted: storage listdir order is backend-dependent (POSIX readdir,
+        # object-store listing, ...) — a fixed seed must shuffle the same
+        # file sequence on every backend for reproducible epochs.
+        names = sorted(n for n in storage.listdir(dirpath) if n.endswith(suffix))
         if dirpath not in (".", ""):
             names = [f"{dirpath}/{n}" for n in names]
         return Dataset.from_tensor_slices(names)
@@ -78,22 +158,46 @@ class Dataset:
         return Dataset(lambda: iter(range(n)))
 
     # -- transformations -------------------------------------------------------
+    def shard(self, num_shards: int, index: int) -> "Dataset":
+        """Keep elements whose position ``% num_shards == index`` (tf.data
+        ``Dataset.shard``): disjoint per-worker subsets that cover the input."""
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        if not 0 <= index < num_shards:
+            raise ValueError(f"index {index} out of range [0, {num_shards})")
+        upstream = self._gen_fn
+
+        def gen():
+            it = upstream()
+            try:
+                for i, item in enumerate(it):
+                    if i % num_shards == index:
+                        yield item
+            finally:
+                _close_iter(it)
+
+        return Dataset(gen)
+
     def shuffle(self, buffer_size: int, seed: Optional[int] = None) -> "Dataset":
         upstream = self._gen_fn
 
         def gen():
             rng = random.Random(seed)
             buf: List[Any] = []
-            for item in upstream():
-                buf.append(item)
-                if len(buf) >= buffer_size:
+            it = upstream()
+            try:
+                for item in it:
+                    buf.append(item)
+                    if len(buf) >= buffer_size:
+                        idx = rng.randrange(len(buf))
+                        buf[idx], buf[-1] = buf[-1], buf[idx]
+                        yield buf.pop()
+                while buf:
                     idx = rng.randrange(len(buf))
                     buf[idx], buf[-1] = buf[-1], buf[idx]
                     yield buf.pop()
-            while buf:
-                idx = rng.randrange(len(buf))
-                buf[idx], buf[-1] = buf[-1], buf[idx]
-                yield buf.pop()
+            finally:
+                _close_iter(it)
 
         return Dataset(gen)
 
@@ -117,50 +221,157 @@ class Dataset:
 
         if num_parallel_calls <= 1:
             def gen_serial():
-                for item in upstream():
-                    yield safe_fn(item)
+                it = upstream()
+                try:
+                    for item in it:
+                        yield safe_fn(item)
+                finally:
+                    _close_iter(it)
             return Dataset(gen_serial)
 
         def gen_parallel():
-            with ThreadPoolExecutor(max_workers=num_parallel_calls) as pool:
-                src = upstream()
-                window: List = []
+            # shared pool, sized once; the window caps this stage's in-flight
+            # work at num_parallel_calls even when the pool is larger
+            pool = reader_pool(num_parallel_calls)
+            src = upstream()
+            window: List[Future] = []
+            try:
                 # prime the window
                 for item in src:
                     window.append(pool.submit(safe_fn, item))
                     if len(window) >= num_parallel_calls:
                         break
                 for item in src:
-                    if deterministic:
-                        fut = window.pop(0)
-                    else:
-                        # completion order: find first done, else oldest
-                        done_i = next(
-                            (i for i, f in enumerate(window) if f.done()), 0
-                        )
-                        fut = window.pop(done_i)
+                    fut = _take_future(window, deterministic)
                     window.append(pool.submit(safe_fn, item))
                     yield fut.result()
                 while window:
-                    if deterministic:
-                        fut = window.pop(0)
-                    else:
-                        done_i = next(
-                            (i for i, f in enumerate(window) if f.done()), 0
-                        )
-                        fut = window.pop(done_i)
-                    yield fut.result()
+                    yield _take_future(window, deterministic).result()
+            finally:
+                for f in window:
+                    f.cancel()
+                _close_iter(src)
 
         return Dataset(gen_parallel)
+
+    def interleave(
+        self,
+        fn: Callable[[Any], Iterable],
+        cycle_length: int = 4,
+        block_length: int = 1,
+        num_parallel_calls: int = 0,
+    ) -> "Dataset":
+        """Expand each input element to a sub-stream via ``fn`` and interleave
+        ``cycle_length`` of them round-robin, ``block_length`` elements at a
+        time (tf.data ``parallel_interleave``).
+
+        With ``num_parallel_calls > 1`` the next block of up to
+        ``min(cycle_length, num_parallel_calls)`` slots is fetched on the
+        shared reader pool while earlier blocks are consumed — so e.g. eight
+        ``.rrf`` shards stream concurrently record-by-record instead of one
+        whole file per element.  Each slot has at most one outstanding fetch,
+        which serializes its sub-iterator without locks.  Output order is
+        deterministic regardless of thread timing.
+
+        Errors (``fn`` raising, or a sub-iterator raising mid-stream) become
+        element-level markers: the failing slot is retired and the rest of
+        the cycle keeps streaming, so one corrupt shard doesn't kill the
+        epoch when ``ignore_errors()`` is downstream.
+        """
+        if cycle_length < 1:
+            raise ValueError(f"cycle_length must be >= 1, got {cycle_length}")
+        if block_length < 1:
+            raise ValueError(f"block_length must be >= 1, got {block_length}")
+        upstream = self._gen_fn
+        fn_label = getattr(fn, "__name__", "interleave_fn")
+
+        def _fetch_block(slot: _InterleaveSlot):
+            """Pull up to block_length elements from one slot (pool task).
+
+            Returns ``(values, exhausted)``; per-element failures append a
+            marker and retire the slot."""
+            with trace.span(trace.STAGE_DECODE, fn_label):
+                out: List[Any] = []
+                if slot.it is None:
+                    try:
+                        slot.it = iter(fn(slot.item))
+                    except Exception as e:
+                        return [_ErrorMarker(e)], True
+                for _ in range(block_length):
+                    try:
+                        out.append(next(slot.it))
+                    except StopIteration:
+                        return out, True
+                    except Exception as e:
+                        out.append(_ErrorMarker(e))
+                        return out, True
+                return out, False
+
+        parallel = num_parallel_calls > 1
+        window = min(cycle_length, num_parallel_calls) if parallel else 0
+
+        def gen():
+            pool = reader_pool(num_parallel_calls) if parallel else None
+            src = upstream()
+            cycle: deque = deque()      # slots in round-robin order
+            futs: dict = {}             # slot -> in-flight block fetch
+            src_done = False
+            try:
+                while True:
+                    while len(cycle) < cycle_length and not src_done:
+                        try:
+                            nxt = next(src)
+                        except StopIteration:
+                            src_done = True
+                            break
+                        if isinstance(nxt, _ErrorMarker):
+                            yield nxt
+                            continue
+                        cycle.append(_InterleaveSlot(nxt))
+                    if not cycle:
+                        return
+                    if pool is not None:
+                        for s in itertools.islice(cycle, 0, window):
+                            if s not in futs:
+                                futs[s] = pool.submit(_fetch_block, s)
+                    slot = cycle.popleft()
+                    if pool is not None:
+                        fut = futs.pop(slot, None)
+                        if fut is None:
+                            fut = pool.submit(_fetch_block, slot)
+                        vals, exhausted = fut.result()
+                    else:
+                        vals, exhausted = _fetch_block(slot)
+                    if not exhausted:
+                        cycle.append(slot)
+                    yield from vals
+            finally:
+                for f in futs.values():
+                    f.cancel()
+                # cancel() cannot stop RUNNING fetches — wait them out so no
+                # pool worker is still inside next(slot.it) when we close the
+                # sub-iterators (generator.close() from another thread would
+                # raise "generator already executing" and abort the teardown)
+                if futs:
+                    futures_wait(list(futs.values()))
+                for s in cycle:
+                    _close_iter(s.it)
+                _close_iter(src)
+
+        return Dataset(gen)
 
     def ignore_errors(self) -> "Dataset":
         upstream = self._gen_fn
 
         def gen():
-            for item in upstream():
-                if isinstance(item, _ErrorMarker):
-                    continue
-                yield item
+            it = upstream()
+            try:
+                for item in it:
+                    if isinstance(item, _ErrorMarker):
+                        continue
+                    yield item
+            finally:
+                _close_iter(it)
 
         return Dataset(gen)
 
@@ -175,19 +386,174 @@ class Dataset:
                 )
             if isinstance(first, dict):
                 return {k: _stack([e[k] for e in elems]) for k in first}
-            return np.stack([np.asarray(e) for e in elems])
+            if isinstance(first, np.ndarray):
+                # one allocation + per-element copy into it (no asarray churn)
+                out = np.empty((len(elems),) + first.shape, first.dtype)
+                for i, e in enumerate(elems):
+                    out[i] = e
+                return out
+            return np.asarray(elems)
 
         def gen():
             buf: List[Any] = []
-            for item in _raising(upstream()):
-                buf.append(item)
-                if len(buf) == batch_size:
+            it = _raising(upstream())
+            try:
+                for item in it:
+                    buf.append(item)
+                    if len(buf) == batch_size:
+                        yield _stack(buf)
+                        buf = []
+                if buf and not drop_remainder:
                     yield _stack(buf)
-                    buf = []
-            if buf and not drop_remainder:
-                yield _stack(buf)
+            finally:
+                _close_iter(it)
 
         return Dataset(gen)
+
+    def map_and_batch(
+        self,
+        fn: Callable[[Any, np.ndarray], Any],
+        batch_size: int,
+        *,
+        num_parallel_calls: int = 1,
+        drop_remainder: bool = True,
+        out_shape: Sequence[int] = (),
+        out_dtype: Any = np.float32,
+        ignore_errors: bool = False,
+    ) -> "Dataset":
+        """Fused map+batch (tf.contrib.data ``map_and_batch``): ``fn(item,
+        out)`` decodes each element *directly into its row of a preallocated*
+        ``(batch_size, *out_shape)`` buffer and returns an optional auxiliary
+        scalar (e.g. the label).
+
+        Batches are the buffer alone, or ``(buffer, np.asarray(auxes))`` when
+        ``fn`` returns non-None — no per-element ``np.asarray``/``np.stack``
+        ever runs.  With ``num_parallel_calls > 1``, up to that many rows
+        fill concurrently on the shared reader pool.  ``ignore_errors=True``
+        gives the fused equivalent of ``map().ignore_errors().batch()``: a
+        failed row is refilled from the next upstream element (same element
+        multiset as the legacy chain; row order within the batch may differ
+        after a failure).
+        """
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        upstream = self._gen_fn
+        fn_label = getattr(fn, "__name__", "map_and_batch_fn")
+        out_shape = tuple(out_shape)
+
+        class _Exhausted(Exception):
+            pass
+
+        def _next_item(src):
+            while True:
+                try:
+                    item = next(src)
+                except StopIteration:
+                    raise _Exhausted from None
+                if isinstance(item, _ErrorMarker):
+                    if ignore_errors:
+                        continue
+                    raise item.exc
+                return item
+
+        def _row(buf, i):
+            # 0-d rows need an explicit view: buf[i] on a 1-D buffer is a
+            # scalar copy, so fn's writes would be lost
+            return buf[i] if out_shape else buf[i:i + 1].reshape(())
+
+        def _run(item, row):
+            with trace.span(trace.STAGE_DECODE, fn_label):
+                return fn(item, row)
+
+        def _assemble(buf, aux, rows):
+            """Finalize one batch from the filled row indices."""
+            if len(rows) < buf.shape[0]:
+                rows = sorted(rows)
+                buf = buf[rows]
+                aux = [aux[i] for i in rows]
+            if all(a is None for a in aux):
+                return buf
+            return buf, np.asarray(aux)
+
+        def gen_serial():
+            src = upstream()
+            try:
+                while True:
+                    buf = np.empty((batch_size,) + out_shape, out_dtype)
+                    aux: List[Any] = [None] * batch_size
+                    filled: List[int] = []
+                    try:
+                        for i in range(batch_size):
+                            while True:
+                                item = _next_item(src)
+                                try:
+                                    aux[i] = _run(item, _row(buf, i))
+                                except Exception as e:
+                                    if ignore_errors:
+                                        continue
+                                    yield _ErrorMarker(e)
+                                    return
+                                filled.append(i)
+                                break
+                    except _Exhausted:
+                        if filled and not drop_remainder:
+                            yield _assemble(buf, aux, filled)
+                        return
+                    yield _assemble(buf, aux, filled)
+            finally:
+                _close_iter(src)
+
+        if num_parallel_calls <= 1:
+            return Dataset(gen_serial)
+
+        def gen_parallel():
+            pool = reader_pool(num_parallel_calls)
+            src = upstream()
+            try:
+                exhausted = False
+                while not exhausted:
+                    buf = np.empty((batch_size,) + out_shape, out_dtype)
+                    aux: List[Any] = [None] * batch_size
+                    filled: List[int] = []
+                    to_fill: deque = deque(range(batch_size))
+                    inflight: dict = {}  # future -> row index
+                    error: Optional[BaseException] = None
+                    while (to_fill or inflight) and error is None:
+                        while (to_fill and not exhausted
+                               and len(inflight) < num_parallel_calls):
+                            row = to_fill.popleft()
+                            try:
+                                item = _next_item(src)
+                            except _Exhausted:
+                                exhausted = True
+                                break
+                            inflight[pool.submit(_run, item, _row(buf, row))] = row
+                        if not inflight:
+                            break
+                        done, _ = futures_wait(
+                            inflight, return_when=FIRST_COMPLETED)
+                        for f in done:
+                            row = inflight.pop(f)
+                            exc = f.exception()
+                            if exc is None:
+                                aux[row] = f.result()
+                                filled.append(row)
+                            elif ignore_errors:
+                                to_fill.append(row)  # refill from upstream
+                            elif error is None:
+                                error = exc
+                    if error is not None:
+                        for f in inflight:
+                            f.cancel()
+                        futures_wait(list(inflight))  # rows may still be writing
+                        yield _ErrorMarker(error)
+                        return
+                    if len(filled) == batch_size or (filled and not drop_remainder):
+                        yield _assemble(buf, aux, filled)
+            finally:
+                _close_iter(src)
+
+        return Dataset(gen_parallel)
 
     def repeat(self, count: Optional[int] = None) -> "Dataset":
         upstream = self._gen_fn
@@ -195,7 +561,11 @@ class Dataset:
         def gen():
             i = 0
             while count is None or i < count:
-                yield from upstream()
+                it = upstream()
+                try:
+                    yield from it
+                finally:
+                    _close_iter(it)
                 i += 1
 
         return Dataset(gen)
@@ -205,11 +575,14 @@ class Dataset:
 
         def gen():
             it = upstream()
-            for _ in range(n):
-                try:
-                    yield next(it)
-                except StopIteration:
-                    return
+            try:
+                for _ in range(n):
+                    try:
+                        yield next(it)
+                    except StopIteration:
+                        return
+            finally:
+                _close_iter(it)
 
         return Dataset(gen)
 
@@ -223,12 +596,20 @@ class Dataset:
             if cached is not None:
                 yield from cached
                 return
+            # epoch 1 (possibly concurrent with another epoch-1 iterator:
+            # each computes independently; a partial iteration never
+            # publishes, so the memo only ever holds a complete stream)
             items = []
-            for item in upstream():
-                items.append(item)
-                yield item
+            it = upstream()
+            try:
+                for item in it:
+                    items.append(item)
+                    yield item
+            finally:
+                _close_iter(it)
             with memo["lock"]:
-                memo["items"] = items
+                if memo["items"] is None:
+                    memo["items"] = items
 
         return Dataset(gen)
 
@@ -240,7 +621,9 @@ class Dataset:
 
     # -- sinks -------------------------------------------------------------------
     def __iter__(self) -> Iterator:
-        return _raising(iter(self._gen_fn()))
+        """Closeable iterator: ``it.close()`` (or ``with iter(ds) as it:``)
+        tears down prefetch threads and in-flight reader-pool work."""
+        return _raising(self._gen_fn())
 
     def as_numpy(self) -> List[Any]:
         return list(self)
@@ -259,38 +642,188 @@ def image_pipeline(
     seed: int = 0,
     preprocess: bool = True,
     repeat: bool = False,
+    channels: int = 3,
+    vectorized: bool = True,
 ) -> Dataset:
-    """The paper's full input pipeline (Fig. 2) over an image-file corpus."""
+    """The paper's full input pipeline (Fig. 2) over an image-file corpus.
+
+    ``vectorized=True`` (default) runs the fused ``map_and_batch`` path:
+    zero-copy record decode, LUT-gather resize with the dtype conversion
+    folded in, rows written straight into the batch buffer.
+    ``vectorized=False`` keeps the seed per-element ``map -> ignore_errors ->
+    batch`` chain (the fig11 baseline).
+    """
     from . import records
 
     if labels is not None:
         src = Dataset.from_tensor_slices(list(zip(paths, labels)))
-
-        def load(item):
-            path, label = item
-            blob = storage.read_file(path)                      # tf.read_file
-            payload = records.decode_single_record(blob)
-            if preprocess:
-                img = records.preprocess_image(payload, *out_hw)  # decode+resize
-            else:
-                img = np.frombuffer(payload, dtype=np.uint8)      # read-only mode
-            return img, np.int32(label)
     else:
         src = Dataset.from_tensor_slices(list(paths))
-
-        def load(path):
-            blob = storage.read_file(path)
-            payload = records.decode_single_record(blob)
-            if preprocess:
-                return records.preprocess_image(payload, *out_hw)
-            return np.frombuffer(payload, dtype=np.uint8)
 
     ds = src.shuffle(shuffle_buffer, seed=seed)
     if repeat:
         ds = ds.repeat()
-    ds = ds.map(load, num_parallel_calls=num_parallel_calls)
-    ds = ds.ignore_errors()
-    ds = ds.batch(batch_size, drop_remainder=True)
+
+    if preprocess and vectorized:
+        if labels is not None:
+            def load_into(item, out):
+                path, label = item
+                blob = storage.read_file(path)                   # tf.read_file
+                payload = records.decode_single_record(blob, copy=False)
+                records.preprocess_image_into(payload, out)
+                return np.int32(label)
+        else:
+            def load_into(path, out):
+                blob = storage.read_file(path)
+                payload = records.decode_single_record(blob, copy=False)
+                records.preprocess_image_into(payload, out)
+                return None
+
+        ds = ds.map_and_batch(
+            load_into, batch_size, num_parallel_calls=num_parallel_calls,
+            out_shape=(*out_hw, channels), out_dtype=np.float32,
+            ignore_errors=True, drop_remainder=True)
+    else:
+        if labels is not None:
+            def load(item):
+                path, label = item
+                blob = storage.read_file(path)                   # tf.read_file
+                payload = records.decode_single_record(blob)
+                if preprocess:
+                    img = records.preprocess_image(payload, *out_hw)
+                else:
+                    img = np.frombuffer(payload, dtype=np.uint8)  # read-only
+                return img, np.int32(label)
+        else:
+            def load(path):
+                blob = storage.read_file(path)
+                payload = records.decode_single_record(blob)
+                if preprocess:
+                    return records.preprocess_image(payload, *out_hw)
+                return np.frombuffer(payload, dtype=np.uint8)
+
+        ds = ds.map(load, num_parallel_calls=num_parallel_calls)
+        ds = ds.ignore_errors()
+        ds = ds.batch(batch_size, drop_remainder=True)
+
+    if prefetch:
+        ds = ds.prefetch(prefetch)
+    return ds
+
+
+def sharded_image_pipeline(
+    storage,
+    shard_paths: Sequence[str],
+    labels_per_shard: Optional[Sequence[Sequence[int]]] = None,
+    *,
+    batch_size: int = 64,
+    cycle_length: int = 4,
+    block_length: int = 8,
+    num_parallel_calls: int = 4,
+    prefetch: int = 1,
+    out_hw: tuple = (224, 224),
+    seed: int = 0,
+    preprocess: bool = True,
+    repeat: bool = False,
+    channels: int = 3,
+    num_shards: int = 1,
+    shard_index: int = 0,
+    batched_preprocess: Optional[str] = None,
+) -> Dataset:
+    """High-throughput ingestion over multi-record ``.rrf`` shards.
+
+    The vectorized read engine: shards are shuffled, ``cycle_length`` of
+    them stream concurrently record-by-record through ``interleave`` (one
+    sequential storage read per shard instead of one seek per image), and
+    records decode zero-copy straight into the fused ``map_and_batch``
+    buffer.  ``num_shards``/``shard_index`` apply ``Dataset.shard`` for
+    multi-worker disjoint coverage.
+
+    ``batched_preprocess`` switches resize+convert from per-record-on-host
+    to whole-batch: ``"numpy"`` uses the batched LUT gather, ``"pallas"``
+    the fused device kernel (:func:`repro.kernels.preprocess.
+    resize_convert_images`).  Both require a uniform-size corpus
+    (``write_sharded_image_dataset(hw_jitter=0)``).
+    """
+    from . import records
+
+    if labels_per_shard is not None:
+        items: List[Any] = [
+            (p, list(ls)) for p, ls in zip(shard_paths, labels_per_shard)
+        ]
+    else:
+        items = list(shard_paths)
+
+    src = Dataset.from_tensor_slices(items)
+    if num_shards > 1:
+        src = src.shard(num_shards, shard_index)
+    src = src.shuffle(max(len(items), 1), seed=seed)
+    if repeat:
+        src = src.repeat()
+
+    if labels_per_shard is not None:
+        def stream_shard(item):
+            path, labels = item
+            blob = storage.read_file(path)          # one sequential shard read
+            return zip(records.iter_record_views(blob), labels)
+    else:
+        def stream_shard(path):
+            blob = storage.read_file(path)
+            return records.iter_record_views(blob)
+
+    ds = src.interleave(
+        stream_shard, cycle_length=cycle_length, block_length=block_length,
+        num_parallel_calls=num_parallel_calls)
+
+    if not preprocess:
+        # read-only mode (fig5): element = record byte length
+        def record_len(item):
+            view = item[0] if labels_per_shard is not None else item
+            return np.int64(len(view))
+
+        ds = ds.map(record_len).ignore_errors()
+        ds = ds.batch(batch_size, drop_remainder=True)
+    elif batched_preprocess:
+        # decode raw uint8 on host, resize+convert whole batches at once
+        from ..kernels import preprocess as kpre
+
+        if labels_per_shard is not None:
+            def decode_raw(item):
+                view, label = item
+                return records.decode_image(view, copy=False), np.int32(label)
+        else:
+            def decode_raw(view):
+                return records.decode_image(view, copy=False)
+
+        ds = ds.map(decode_raw, num_parallel_calls=num_parallel_calls)
+        ds = ds.ignore_errors()
+        ds = ds.batch(batch_size, drop_remainder=True)
+
+        def batch_resize(batch):
+            if labels_per_shard is not None:
+                imgs, labels = batch
+                return kpre.resize_convert(
+                    imgs, *out_hw, backend=batched_preprocess), labels
+            return kpre.resize_convert(batch, *out_hw,
+                                       backend=batched_preprocess)
+
+        ds = ds.map(batch_resize)
+    else:
+        if labels_per_shard is not None:
+            def decode_into(item, out):
+                view, label = item
+                records.preprocess_image_into(view, out)
+                return np.int32(label)
+        else:
+            def decode_into(view, out):
+                records.preprocess_image_into(view, out)
+                return None
+
+        ds = ds.map_and_batch(
+            decode_into, batch_size, num_parallel_calls=num_parallel_calls,
+            out_shape=(*out_hw, channels), out_dtype=np.float32,
+            ignore_errors=True, drop_remainder=True)
+
     if prefetch:
         ds = ds.prefetch(prefetch)
     return ds

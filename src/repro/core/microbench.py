@@ -4,6 +4,14 @@ Measures raw ingestion bandwidth of the input pipeline: read files from a
 storage tier, optionally decode+resize, batch, and pull batches through the
 iterator as fast as possible (no compute phase).  Reports images/s and MB/s
 as the paper does, under a strong-scaling sweep of reader threads.
+
+Two pipelines are measurable:
+
+* ``run_microbench`` — the per-file pipeline (one single-image ``.rrf`` per
+  element), in ``legacy`` (per-element map -> stack) or ``vectorized``
+  (fused ``map_and_batch`` + zero-copy decode) form;
+* ``run_sharded_microbench`` — the interleaved shard-streaming engine over
+  multi-record shards (fig11's fast path).
 """
 from __future__ import annotations
 
@@ -14,7 +22,7 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from . import records
-from .dataset import Dataset
+from .dataset import Dataset, image_pipeline, sharded_image_pipeline
 
 
 @dataclass
@@ -41,6 +49,24 @@ class MicrobenchResult:
         )
 
 
+def _consume(ds, n_batches: Optional[int] = None):
+    """Pull batches through the iterator; returns (n_images, seconds)."""
+    n_images = 0
+    t0 = time.monotonic()
+    it = iter(ds)
+    try:
+        consumed_batches = 0
+        for batch in it:
+            first = batch[0] if isinstance(batch, tuple) else batch
+            n_images += len(first)
+            consumed_batches += 1
+            if n_batches is not None and consumed_batches >= n_batches:
+                break
+    finally:
+        it.close()
+    return n_images, time.monotonic() - t0
+
+
 def run_microbench(
     storage,
     paths: Sequence[str],
@@ -51,37 +77,48 @@ def run_microbench(
     out_hw: tuple = (64, 64),
     seed: int = 0,
     n_batches: Optional[int] = None,
+    pipeline: str = "legacy",
 ) -> MicrobenchResult:
-    """One micro-benchmark run: consume the corpus through the pipeline."""
+    """One micro-benchmark run: consume the corpus through the per-file
+    pipeline.  ``pipeline="vectorized"`` uses the fused map_and_batch path
+    (zero-copy decode + LUT resize into the batch buffer)."""
+    if pipeline not in ("legacy", "vectorized"):
+        raise ValueError(f"unknown pipeline {pipeline!r}")
     sizes = {}
 
-    def load(path):
-        blob = storage.read_file(path)  # tf.read_file()
-        sizes[path] = len(blob)
-        if not preprocess:
-            return np.int64(len(blob))  # read-only pipeline (paper Fig. 5)
-        payload = records.decode_single_record(blob)
-        return records.preprocess_image(payload, *out_hw)
+    if pipeline == "vectorized" and preprocess:
+        def load_into(path, out):
+            blob = storage.read_file(path)  # tf.read_file()
+            sizes[path] = len(blob)
+            payload = records.decode_single_record(blob, copy=False)
+            records.preprocess_image_into(payload, out)
+            return None
 
-    ds = (
-        Dataset.from_tensor_slices(list(paths))
-        .shuffle(len(paths), seed=seed)
-        .map(load, num_parallel_calls=threads)
-        .ignore_errors()
-        .batch(batch_size, drop_remainder=True)
-    )
+        ds = (
+            Dataset.from_tensor_slices(list(paths))
+            .shuffle(len(paths), seed=seed)
+            .map_and_batch(load_into, batch_size, num_parallel_calls=threads,
+                           out_shape=(*out_hw, 3), ignore_errors=True,
+                           drop_remainder=True)
+        )
+    else:
+        def load(path):
+            blob = storage.read_file(path)  # tf.read_file()
+            sizes[path] = len(blob)
+            if not preprocess:
+                return np.int64(len(blob))  # read-only pipeline (paper Fig. 5)
+            payload = records.decode_single_record(blob)
+            return records.preprocess_image(payload, *out_hw)
 
-    n_images = 0
-    t0 = time.monotonic()
-    it = iter(ds)
-    consumed_batches = 0
-    for batch in it:
-        first = batch[0] if isinstance(batch, tuple) else batch
-        n_images += len(first)
-        consumed_batches += 1
-        if n_batches is not None and consumed_batches >= n_batches:
-            break
-    seconds = time.monotonic() - t0
+        ds = (
+            Dataset.from_tensor_slices(list(paths))
+            .shuffle(len(paths), seed=seed)
+            .map(load, num_parallel_calls=threads)
+            .ignore_errors()
+            .batch(batch_size, drop_remainder=True)
+        )
+
+    n_images, seconds = _consume(ds, n_batches)
 
     return MicrobenchResult(
         storage=getattr(storage, "name", "?"),
@@ -93,6 +130,40 @@ def run_microbench(
     )
 
 
+def run_sharded_microbench(
+    storage,
+    shard_paths: Sequence[str],
+    *,
+    threads: int = 1,
+    batch_size: int = 64,
+    preprocess: bool = True,
+    out_hw: tuple = (64, 64),
+    seed: int = 0,
+    block_length: int = 8,
+    n_batches: Optional[int] = None,
+) -> MicrobenchResult:
+    """Ingestion bandwidth of the interleaved shard-streaming engine:
+    ``threads`` shards in flight (cycle_length = num_parallel_calls =
+    threads), records decoded zero-copy into the fused batch buffer."""
+    total_bytes = sum(storage.size(p) for p in shard_paths)
+    ds = sharded_image_pipeline(
+        storage, list(shard_paths), batch_size=batch_size,
+        cycle_length=max(threads, 1), block_length=block_length,
+        num_parallel_calls=threads, prefetch=0, out_hw=out_hw, seed=seed,
+        preprocess=preprocess)
+
+    n_images, seconds = _consume(ds, n_batches)
+
+    return MicrobenchResult(
+        storage=getattr(storage, "name", "?"),
+        threads=threads,
+        preprocess=preprocess,
+        n_images=n_images,
+        total_bytes=total_bytes,
+        seconds=seconds,
+    )
+
+
 def thread_scaling_sweep(
     storage,
     paths: Sequence[str],
@@ -100,15 +171,20 @@ def thread_scaling_sweep(
     thread_counts: Sequence[int] = (1, 2, 4, 8),
     repeats: int = 3,
     warmup: bool = True,
+    bench=None,
     **kw,
 ) -> List[MicrobenchResult]:
-    """Paper's strong-scaling protocol: warm-up run discarded, median kept."""
+    """Paper's strong-scaling protocol: warm-up run discarded, median kept.
+
+    ``bench`` selects the benchmark body (default :func:`run_microbench`;
+    pass :func:`run_sharded_microbench` for the interleaved engine)."""
+    fn = bench if bench is not None else run_microbench
     out: List[MicrobenchResult] = []
     for t in thread_counts:
         runs = []
         n = repeats + (1 if warmup else 0)
         for i in range(n):
-            r = run_microbench(storage, paths, threads=t, **kw)
+            r = fn(storage, paths, threads=t, **kw)
             if warmup and i == 0:
                 continue
             runs.append(r)

@@ -9,6 +9,11 @@ upstream operation.  :class:`PrefetchIterator` is precisely that structure.
 (which TF 1.10 did not): batches are moved onto the accelerator (with an
 optional sharding) ``size`` steps ahead, so host->HBM transfer also overlaps
 with the device step.
+
+Lifecycle: ``close()`` stops the producer thread promptly (no waiting for
+GC) and closes the upstream iterator chain from the producer's own thread —
+dataset iterators propagate their ``close()`` here, so an abandoned
+pipeline releases its background thread end-to-end.
 """
 from __future__ import annotations
 
@@ -65,6 +70,15 @@ class PrefetchIterator:
             with self._cond:
                 self._error = e
         finally:
+            # tear down the upstream chain from the thread that owns it
+            # (propagates close through map/interleave nodes when the
+            # consumer abandons the pipeline)
+            close = getattr(self._upstream, "close", None)
+            if close is not None:
+                try:
+                    close()
+                except Exception:
+                    pass
             with self._cond:
                 self._done = True
                 self._cond.notify_all()
@@ -86,10 +100,18 @@ class PrefetchIterator:
                 raise err
             raise StopIteration
 
-    def close(self) -> None:
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Stop the producer thread and release the upstream chain.
+
+        Idempotent; with ``timeout`` the call also joins the producer thread
+        (used by the no-leaked-threads regression tests).  Called
+        automatically when a downstream dataset iterator is closed.
+        """
         with self._cond:
             self._closed = True
             self._cond.notify_all()
+        if timeout is not None:
+            self._thread.join(timeout)
 
     def __del__(self):  # pragma: no cover - best effort
         try:

@@ -1,0 +1,111 @@
+"""Shared, lazily-sized reader thread pool for the input pipeline.
+
+The seed pipeline created a fresh ``ThreadPoolExecutor`` inside every
+``map(num_parallel_calls=k)`` iterator — one pool *per epoch per stage*,
+paying thread spawn/teardown on every epoch boundary and preventing any
+reuse across pipeline stages.  The paper's tf.data runtime instead owns one
+long-lived inter-op pool that every stage schedules onto.
+
+:class:`ReaderPool` is that pool: a process-wide set of daemon worker
+threads that grows on demand (``ensure(n)``) and never shrinks.  Stages cap
+their own in-flight work (a ``map`` keeps ``num_parallel_calls`` futures in
+its window, an ``interleave`` keeps at most ``num_parallel_calls`` block
+fetches outstanding), so a pool that grew to 8 workers for one sweep does
+not inflate the concurrency of a later 1-thread run — pool size is a
+capacity ceiling, not a parallelism setting.
+
+Futures are standard :class:`concurrent.futures.Future` objects, so
+``concurrent.futures.wait(..., FIRST_COMPLETED)`` works on them directly
+(completion-order ``map`` and interleave block scheduling rely on this).
+"""
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+from concurrent.futures import Future
+from typing import Any, Callable, List, Optional
+
+_counter = itertools.count()
+
+
+class ReaderPool:
+    """Grow-only thread pool with ``Future``-based submission."""
+
+    def __init__(self, name: str = "reader"):
+        self._name = name
+        self._id = next(_counter)
+        self._work: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._threads: List[threading.Thread] = []
+        self._lock = threading.Lock()
+        self._shutdown = False
+
+    # -- sizing ----------------------------------------------------------------
+    @property
+    def size(self) -> int:
+        return len(self._threads)
+
+    def ensure(self, n_workers: int) -> "ReaderPool":
+        """Grow the pool to at least ``n_workers`` threads (never shrinks)."""
+        if n_workers <= 0:
+            return self
+        with self._lock:
+            if self._shutdown:
+                raise RuntimeError("ReaderPool is shut down")
+            while len(self._threads) < n_workers:
+                t = threading.Thread(
+                    target=self._worker,
+                    name=f"{self._name}-{self._id}-{len(self._threads)}",
+                    daemon=True,
+                )
+                t.start()
+                self._threads.append(t)
+        return self
+
+    # -- execution -------------------------------------------------------------
+    def _worker(self) -> None:
+        while True:
+            item = self._work.get()
+            if item is None:  # shutdown sentinel
+                return
+            fut, fn, args, kwargs = item
+            if not fut.set_running_or_notify_cancel():
+                continue
+            try:
+                fut.set_result(fn(*args, **kwargs))
+            except BaseException as e:
+                fut.set_exception(e)
+
+    def submit(self, fn: Callable, *args: Any, **kwargs: Any) -> Future:
+        if not self._threads:
+            self.ensure(1)
+        fut: Future = Future()
+        self._work.put((fut, fn, args, kwargs))
+        return fut
+
+    def shutdown(self) -> None:
+        """Stop all workers (used by tests; the global pool lives forever)."""
+        with self._lock:
+            if self._shutdown:
+                return
+            self._shutdown = True
+            threads, self._threads = self._threads, []
+        for _ in threads:
+            self._work.put(None)
+        for t in threads:
+            t.join(timeout=5.0)
+
+
+_global_pool: Optional[ReaderPool] = None
+_global_lock = threading.Lock()
+
+
+def reader_pool(min_workers: int = 0) -> ReaderPool:
+    """The process-wide shared pool, grown to at least ``min_workers``."""
+    global _global_pool
+    with _global_lock:
+        if _global_pool is None:
+            _global_pool = ReaderPool()
+    if min_workers:
+        _global_pool.ensure(min_workers)
+    return _global_pool

@@ -15,14 +15,33 @@ mapped function.  We have no JPEG codec in this environment, so we define:
 
 Preprocessing mirrors the paper's mapped function: decode → convert dtype to
 float in [0,1] → resize to the network's input size (224x224x3 for AlexNet).
+
+Vectorized-pipeline additions (ISSUE 3):
+
+* ``decode_records(blob, copy=False)`` / ``decode_image(payload, copy=False)``
+  are the zero-copy variants: record payloads come back as ``memoryview``
+  slices of the shard blob and image bodies as read-only ``np.frombuffer``
+  views — no byte is copied between the storage read and the resize gather.
+* :func:`resize_image` is a LUT-gather bilinear: corner indices and weights
+  are precomputed once per (in_hw, out_hw) pair (LRU-cached) and applied as
+  four output-sized ``take`` gathers — no ``img[y0][:, x0]``-style
+  full-width intermediates — with an optional ``out=`` buffer so a fused
+  ``map_and_batch`` can decode straight into the batch tensor.
+  :func:`resize_image_reference` keeps the seed implementation as the
+  parity oracle (the LUT path is bit-identical to it for float inputs).
+* :func:`write_sharded_image_dataset` writes multi-record ``.rrf`` shards
+  (many images per file) for the ``Dataset.interleave`` streaming path.
 """
 from __future__ import annotations
 
 import struct
 import zlib
-from typing import Iterator, List, Sequence, Tuple
+from functools import lru_cache
+from typing import Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
+
+Buffer = Union[bytes, bytearray, memoryview]
 
 RECORD_HDR = struct.Struct("<QI")   # length, crc(length)
 RECORD_FTR = struct.Struct("<I")    # crc(payload)
@@ -46,29 +65,41 @@ def encode_record(payload: bytes) -> bytes:
     return hdr + payload + ftr
 
 
-def decode_records(blob: bytes) -> Iterator[bytes]:
-    """Yield payloads from a byte-string of concatenated RRF1 records."""
-    off, n = 0, len(blob)
+def decode_records(blob: Buffer, copy: bool = True) -> Iterator[Buffer]:
+    """Yield payloads from a byte-string of concatenated RRF1 records.
+
+    With ``copy=False`` each payload is a ``memoryview`` slice of ``blob``
+    (zero-copy: CRC validation reads through the view, nothing is
+    duplicated).  The views alias ``blob`` — decode or copy them before
+    mutating/releasing the backing buffer.
+    """
+    view = blob if isinstance(blob, memoryview) else memoryview(blob)
+    off, n = 0, len(view)
     while off < n:
         if off + RECORD_HDR.size > n:
             raise RecordError("truncated record header")
-        length, hcrc = RECORD_HDR.unpack_from(blob, off)
+        length, hcrc = RECORD_HDR.unpack_from(view, off)
         if zlib.crc32(struct.pack("<Q", length)) != hcrc:
             raise RecordError("record header crc mismatch")
         off += RECORD_HDR.size
         if off + length + RECORD_FTR.size > n:
             raise RecordError("truncated record payload")
-        payload = blob[off : off + length]
+        payload = view[off : off + length]
         off += length
-        (pcrc,) = RECORD_FTR.unpack_from(blob, off)
+        (pcrc,) = RECORD_FTR.unpack_from(view, off)
         off += RECORD_FTR.size
         if zlib.crc32(payload) != pcrc:
             raise RecordError("record payload crc mismatch")
-        yield payload
+        yield payload.tobytes() if copy else payload
 
 
-def decode_single_record(blob: bytes) -> bytes:
-    payloads = list(decode_records(blob))
+def iter_record_views(blob: Buffer) -> Iterator[memoryview]:
+    """Zero-copy record iterator (``decode_records(blob, copy=False)``)."""
+    return decode_records(blob, copy=False)
+
+
+def decode_single_record(blob: Buffer, copy: bool = True) -> Buffer:
+    payloads = list(decode_records(blob, copy=copy))
     if len(payloads) != 1:
         raise RecordError(f"expected 1 record, found {len(payloads)}")
     return payloads[0]
@@ -90,8 +121,15 @@ def encode_image(arr: np.ndarray) -> bytes:
     return IMG_HDR.pack(IMG_MAGIC, h, w, c, code) + arr.tobytes()
 
 
-def decode_image(payload: bytes) -> np.ndarray:
-    """``tf.image.decode_jpeg`` analogue (parse + validate + materialize)."""
+def decode_image(payload: Buffer, copy: bool = True) -> np.ndarray:
+    """``tf.image.decode_jpeg`` analogue (parse + validate + materialize).
+
+    With ``copy=False`` the returned array is a read-only view sharing the
+    payload's memory (zero-copy decode): the header is parsed and validated
+    but the ``h*w*c`` samples are never duplicated.  The view aliases
+    ``payload`` — downstream stages that write (resize ``out=``, dtype
+    conversion) allocate their own output, so the pipeline never mutates it.
+    """
     if len(payload) < IMG_HDR.size:
         raise RecordError("image payload too short")
     magic, h, w, c, code = IMG_HDR.unpack_from(payload, 0)
@@ -100,11 +138,13 @@ def decode_image(payload: bytes) -> np.ndarray:
     dtype = _DTYPES.get(code)
     if dtype is None:
         raise RecordError(f"bad image dtype code {code}")
-    body = payload[IMG_HDR.size :]
+    view = payload if isinstance(payload, memoryview) else memoryview(payload)
+    body = view[IMG_HDR.size :]
     expected = h * w * c * np.dtype(dtype).itemsize
     if len(body) != expected:
         raise RecordError(f"image body {len(body)}B != expected {expected}B")
-    return np.frombuffer(body, dtype=dtype).reshape(h, w, c).copy()
+    arr = np.frombuffer(body, dtype=dtype).reshape(h, w, c)
+    return arr.copy() if copy else arr
 
 
 # ---------------------------------------------------------------------------
@@ -119,8 +159,13 @@ def convert_image_dtype(img: np.ndarray) -> np.ndarray:
     return img.astype(np.float32)
 
 
-def resize_image(img: np.ndarray, out_h: int, out_w: int) -> np.ndarray:
-    """Bilinear resize (tf.image.resize_images analogue), pure numpy."""
+def resize_image_reference(img: np.ndarray, out_h: int, out_w: int) -> np.ndarray:
+    """Seed bilinear resize, kept as the parity oracle for the LUT path.
+
+    Materializes ``img[y0][:, x0]``-style intermediates (a full-width row
+    gather per corner) — correct but allocation-heavy; the vectorized
+    :func:`resize_image` must stay bit-identical to it for float inputs.
+    """
     h, w, c = img.shape
     if (h, w) == (out_h, out_w):
         return img
@@ -138,11 +183,149 @@ def resize_image(img: np.ndarray, out_h: int, out_w: int) -> np.ndarray:
     return top * (1 - wy) + bot * wy
 
 
-def preprocess_image(payload: bytes, out_h: int = 224, out_w: int = 224) -> np.ndarray:
+@lru_cache(maxsize=256)
+def bilinear_lut(h: int, w: int, out_h: int, out_w: int):
+    """Precomputed gather indices + weights for an (h,w) -> (out_h,out_w)
+    bilinear resize.
+
+    Returns ``(i00, i01, i10, i11, wx, wy)``: four flat ``(out_h*out_w,)``
+    index tables into the row-major (h*w) plane — one per interpolation
+    corner — plus broadcast-ready x/y fractional weights.  Cached per shape
+    pair, so a steady-state pipeline computes each LUT exactly once.
+    """
+    ys = np.linspace(0, h - 1, out_h, dtype=np.float32)
+    xs = np.linspace(0, w - 1, out_w, dtype=np.float32)
+    y0 = np.floor(ys).astype(np.int32)
+    x0 = np.floor(xs).astype(np.int32)
+    y1 = np.minimum(y0 + 1, h - 1)
+    x1 = np.minimum(x0 + 1, w - 1)
+    wy = (ys - y0.astype(np.float32))[:, None, None]
+    wx = (xs - x0.astype(np.float32))[None, :, None]
+    row0 = (y0.astype(np.int64) * w)[:, None]
+    row1 = (y1.astype(np.int64) * w)[:, None]
+    i00 = (row0 + x0[None, :]).ravel()
+    i01 = (row0 + x1[None, :]).ravel()
+    i10 = (row1 + x0[None, :]).ravel()
+    i11 = (row1 + x1[None, :]).ravel()
+    return i00, i01, i10, i11, wx, wy
+
+
+def resize_image(
+    img: np.ndarray,
+    out_h: int,
+    out_w: int,
+    out: Optional[np.ndarray] = None,
+    scale: Optional[float] = None,
+) -> np.ndarray:
+    """Vectorized LUT-gather bilinear resize (tf.image.resize_images analogue).
+
+    Gathers the four interpolation corners with precomputed flat index
+    tables (:func:`bilinear_lut`) — every intermediate is output-sized, so a
+    downscale from (H, W) to (h, w) touches ``4*h*w*c`` samples instead of
+    the reference path's ``2*H*w*c + 4*h*w*c``.  ``out=`` writes the result
+    into a caller-owned buffer (the fused ``map_and_batch`` batch tensor);
+    ``scale=`` folds a dtype-conversion multiply (e.g. 1/255) into the final
+    pass so uint8 sources never materialize as a full-size float image.
+
+    For float inputs without ``scale`` the arithmetic (gather, per-axis
+    lerp order) matches :func:`resize_image_reference` bit for bit.
+    """
+    h, w, c = img.shape
+    if (h, w) == (out_h, out_w):
+        res = img if scale is None else img.astype(np.float32) * scale
+        if out is None:
+            return res
+        out[...] = res
+        return out
+    i00, i01, i10, i11, wx, wy = bilinear_lut(h, w, out_h, out_w)
+    flat = np.ascontiguousarray(img).reshape(h * w, c)
+    shape = (out_h, out_w, c)
+    c00 = flat.take(i00, axis=0).reshape(shape).astype(np.float32)
+    c01 = flat.take(i01, axis=0).reshape(shape).astype(np.float32)
+    c10 = flat.take(i10, axis=0).reshape(shape).astype(np.float32)
+    c11 = flat.take(i11, axis=0).reshape(shape).astype(np.float32)
+    top = c00 * (1 - wx) + c01 * wx
+    bot = c10 * (1 - wx) + c11 * wx
+    if out is None:
+        res = top * (1 - wy) + bot * wy
+        return res if scale is None else res * scale
+    np.multiply(top, 1 - wy, out=top)
+    np.multiply(bot, wy, out=bot)
+    np.add(top, bot, out=out)
+    if scale is not None:
+        out *= scale
+    return out
+
+
+def resize_batch(
+    imgs: np.ndarray,
+    out_h: int,
+    out_w: int,
+    out: Optional[np.ndarray] = None,
+    scale: Optional[float] = None,
+) -> np.ndarray:
+    """Batched LUT-gather resize for same-size images: (B,H,W,C)->(B,h,w,C).
+
+    One gather per corner for the whole batch (the numpy fallback for the
+    Pallas ``resize_convert_images`` kernel).
+    """
+    b, h, w, c = imgs.shape
+    if (h, w) == (out_h, out_w):
+        res = imgs.astype(np.float32) if scale is None else (
+            imgs.astype(np.float32) * scale)
+        if out is None:
+            return res
+        out[...] = res
+        return out
+    i00, i01, i10, i11, wx, wy = bilinear_lut(h, w, out_h, out_w)
+    flat = np.ascontiguousarray(imgs).reshape(b, h * w, c)
+    shape = (b, out_h, out_w, c)
+    c00 = flat.take(i00, axis=1).reshape(shape).astype(np.float32)
+    c01 = flat.take(i01, axis=1).reshape(shape).astype(np.float32)
+    c10 = flat.take(i10, axis=1).reshape(shape).astype(np.float32)
+    c11 = flat.take(i11, axis=1).reshape(shape).astype(np.float32)
+    top = c00 * (1 - wx) + c01 * wx
+    bot = c10 * (1 - wx) + c11 * wx
+    res = out if out is not None else np.empty(shape, np.float32)
+    np.multiply(top, 1 - wy, out=top)
+    np.multiply(bot, wy, out=bot)
+    np.add(top, bot, out=res)
+    if scale is not None:
+        res *= scale
+    return res
+
+
+# uint -> float [0,1] conversion factors (tf.image.convert_image_dtype);
+# the single source of truth — the device kernels import this table too
+CONVERT_SCALE = {np.dtype(np.uint8): 1.0 / 255.0,
+                 np.dtype(np.uint16): 1.0 / 65535.0}
+
+
+def preprocess_image(payload: Buffer, out_h: int = 224, out_w: int = 224) -> np.ndarray:
     """decode -> convert dtype -> resize: the full mapped function."""
     img = decode_image(payload)
     img = convert_image_dtype(img)
     return resize_image(img, out_h, out_w)
+
+
+def preprocess_image_into(
+    payload: Buffer, out: np.ndarray
+) -> np.ndarray:
+    """Fused zero-copy mapped function: decode view -> resize+convert -> out.
+
+    The image body is never copied (``decode_image(copy=False)``); the
+    uint{8,16} -> float [0,1] conversion is folded into the resize's final
+    multiply; the result lands directly in ``out`` (a slice of the batch
+    buffer in the fused ``map_and_batch`` path).  Parity with
+    :func:`preprocess_image` is within float rounding (the conversion
+    multiply commutes with the bilinear lerp up to 1 ulp).
+    """
+    img = decode_image(payload, copy=False)
+    out_h, out_w = out.shape[0], out.shape[1]
+    scale = CONVERT_SCALE.get(img.dtype)
+    if scale is None:  # float payloads: convert is a plain cast
+        return resize_image(img.astype(np.float32), out_h, out_w, out=out)
+    return resize_image(img, out_h, out_w, out=out, scale=scale)
 
 
 # ---------------------------------------------------------------------------
@@ -176,6 +359,55 @@ def write_image_dataset(
         paths.append(path)
         labels.append(int(rng.integers(0, n_classes)))
     return paths, labels
+
+
+def write_sharded_image_dataset(
+    storage,
+    n_images: int,
+    images_per_shard: int,
+    *,
+    mean_hw: Tuple[int, int] = (64, 64),
+    hw_jitter: float = 0.2,
+    channels: int = 3,
+    n_classes: int = 101,
+    seed: int = 0,
+    prefix: str = "shard",
+) -> Tuple[List[str], List[List[int]]]:
+    """Write a multi-record sharded corpus: many IMG1 records per ``.rrf``.
+
+    This is the layout the interleave pipeline streams: one sequential read
+    per *shard* amortizes the device seek over ``images_per_shard`` images
+    (vs one seek per image for :func:`write_image_dataset`'s one-file-per-
+    image layout).  ``hw_jitter=0`` produces a uniform-size corpus (required
+    by the batched device-side ``resize_convert_images`` path).
+
+    Returns ``(shard_paths, labels_per_shard)`` with labels aligned to the
+    record order inside each shard.
+    """
+    rng = np.random.default_rng(seed)
+    paths: List[str] = []
+    labels_per_shard: List[List[int]] = []
+    i = 0
+    s = 0
+    while i < n_images:
+        parts = []
+        labels: List[int] = []
+        for _ in range(min(images_per_shard, n_images - i)):
+            if hw_jitter > 0:
+                h = max(8, int(rng.normal(mean_hw[0], mean_hw[0] * hw_jitter)))
+                w = max(8, int(rng.normal(mean_hw[1], mean_hw[1] * hw_jitter)))
+            else:
+                h, w = mean_hw
+            img = rng.integers(0, 256, size=(h, w, channels), dtype=np.uint8)
+            parts.append(encode_record(encode_image(img)))
+            labels.append(int(rng.integers(0, n_classes)))
+            i += 1
+        path = f"{prefix}_{s:05d}.rrf"
+        storage.write_file(path, b"".join(parts))
+        paths.append(path)
+        labels_per_shard.append(labels)
+        s += 1
+    return paths, labels_per_shard
 
 
 def write_token_dataset(

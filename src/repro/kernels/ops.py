@@ -53,6 +53,14 @@ def normalize_images_nhwc(x: jax.Array, mean: jax.Array, std: jax.Array,
     return jnp.transpose(out.reshape(B, C, H, W), (0, 2, 3, 1))
 
 
+@functools.partial(jax.jit, static_argnames=("out_h", "out_w", "interpret"))
+def resize_convert_nhwc(x: jax.Array, out_h: int, out_w: int,
+                        *, interpret: bool = True) -> jax.Array:
+    """x: (B, H, W, C) u8/u16/f32 -> (B, out_h, out_w, C) f32 in [0,1]
+    (fused matmul-bilinear resize + dtype-convert kernel)."""
+    return _pre.resize_convert_images(x, out_h, out_w, interpret=interpret)
+
+
 # -- flash attention ---------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
 def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array,

@@ -1,19 +1,31 @@
-"""Fused image normalize+cast — Pallas TPU kernel (input-pipeline hot spot).
+"""Fused image preprocess — Pallas TPU kernels (input-pipeline hot spot).
 
 The paper's mapped function ends with convert_image_dtype + normalization on
 the CPU.  On a TPU pod the natural split (DESIGN.md hardware-adaptation) is:
-host decodes/resizes, device does the arithmetic.  This kernel fuses
-uint8->f32 cast, [0,1] scaling, and per-channel (x - mean)/std in one VMEM
-pass.
+host decodes, device does the arithmetic.  Two kernels:
 
-TPU layout choice: NHWC with C=3 would waste 128-wide lanes, so the wrapper
-moves channels to the sublane dim: (B, C, H*W).  Each grid step handles one
-image's (C, PIX_TILE) tile; mean/std live in SMEM-like small refs (C, 1).
+* :func:`normalize_images` fuses uint8->f32 cast, [0,1] scaling, and
+  per-channel (x - mean)/std in one VMEM pass.
+* :func:`resize_convert_images` fuses bilinear resize AND dtype conversion
+  for a whole uniform-size batch: resize is expressed as two small
+  interpolation matmuls (``Ry @ X @ Rx^T``), which maps onto the MXU
+  instead of the gather units, and the [0,1] conversion scale is folded
+  into ``Ry`` so it costs nothing.  :func:`resize_convert` dispatches
+  between this kernel and the batched numpy LUT-gather fallback
+  (:func:`repro.core.records.resize_batch`) on CPU-only hosts.
+
+TPU layout choice for normalize: NHWC with C=3 would waste 128-wide lanes,
+so the wrapper moves channels to the sublane dim: (B, C, H*W).  Each grid
+step handles one image's (C, PIX_TILE) tile; mean/std live in SMEM-like
+small refs (C, 1).
 """
 from __future__ import annotations
 
+from functools import lru_cache
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 PIX_TILE = 2048
@@ -44,3 +56,93 @@ def normalize_images(x: jax.Array, mean: jax.Array, std: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, C, P), jnp.float32),
         interpret=interpret,
     )(x, mean.reshape(C, 1), std.reshape(C, 1))
+
+
+# ---------------------------------------------------------------------------
+# Batched bilinear resize + dtype convert
+# ---------------------------------------------------------------------------
+from ..core.records import CONVERT_SCALE as _CONVERT_SCALE  # noqa: E402
+
+
+@lru_cache(maxsize=64)
+def _interp_matrix(n_in: int, n_out: int, scale: float = 1.0) -> np.ndarray:
+    """(n_out, n_in) bilinear interpolation matrix, same sample positions as
+    ``records.bilinear_lut`` (align-corners linspace); row i holds the two
+    corner weights of output sample i, pre-multiplied by ``scale``."""
+    pos = np.linspace(0, n_in - 1, n_out, dtype=np.float32)
+    lo = np.floor(pos).astype(np.int64)
+    hi = np.minimum(lo + 1, n_in - 1)
+    frac = pos - lo.astype(np.float32)
+    m = np.zeros((n_out, n_in), np.float32)
+    rows = np.arange(n_out)
+    np.add.at(m, (rows, lo), (1.0 - frac) * scale)
+    np.add.at(m, (rows, hi), frac * scale)
+    return m
+
+
+def _make_resize_convert_kernel(scale: float):
+    def kernel(x_ref, ry_ref, rx_ref, o_ref):
+        x = x_ref[0].astype(jnp.float32)          # (H, W, C)
+        ry = ry_ref[...]                          # (OH, H), scale folded in
+        rx = rx_ref[...]                          # (OW, W)
+        t = jnp.einsum("oh,hwc->owc", ry, x,
+                       preferred_element_type=jnp.float32)
+        o_ref[0] = jnp.einsum("pw,owc->opc", rx, t,
+                              preferred_element_type=jnp.float32)
+    kernel.__name__ = f"resize_convert_kernel_s{scale:g}"
+    return kernel
+
+
+def resize_convert_images(x: jax.Array, out_h: int, out_w: int,
+                          *, interpret: bool = True) -> jax.Array:
+    """Batched device-side resize+convert: (B,H,W,C) u8/u16/f32 ->
+    (B,out_h,out_w,C) f32 in [0,1].
+
+    One grid step per image; both interpolation matmuls run on the MXU with
+    the dtype-conversion scale folded into the row matrix.  Requires a
+    uniform-size batch (H, W shared) — the sharded-corpus writers emit one
+    with ``hw_jitter=0``.
+    """
+    B, H, W, C = x.shape
+    scale = float(_CONVERT_SCALE.get(np.dtype(x.dtype), 1.0))
+    ry = jnp.asarray(_interp_matrix(H, out_h, scale))
+    rx = jnp.asarray(_interp_matrix(W, out_w))
+    return pl.pallas_call(
+        _make_resize_convert_kernel(scale),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, H, W, C), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((out_h, H), lambda b: (0, 0)),
+            pl.BlockSpec((out_w, W), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, out_h, out_w, C), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, out_h, out_w, C), jnp.float32),
+        interpret=interpret,
+    )(x, ry, rx)
+
+
+def resize_convert_batch_np(x: np.ndarray, out_h: int, out_w: int) -> np.ndarray:
+    """Numpy fallback: batched LUT-gather resize with the conversion scale
+    folded into the final pass (bit-compatible with the per-image host path)."""
+    from ..core import records
+
+    x = np.asarray(x)
+    scale = _CONVERT_SCALE.get(x.dtype)
+    if scale is None:
+        return records.resize_batch(x.astype(np.float32), out_h, out_w)
+    return records.resize_batch(x, out_h, out_w, scale=scale)
+
+
+def resize_convert(x, out_h: int, out_w: int, *, backend: str = "auto",
+                   interpret: bool = True):
+    """Dispatch batched resize+convert: ``"pallas"`` (device kernel),
+    ``"numpy"`` (host LUT gather), or ``"auto"`` (kernel only when a real
+    accelerator backend is present)."""
+    if backend == "auto":
+        backend = "numpy" if jax.default_backend() == "cpu" else "pallas"
+    if backend == "numpy":
+        return resize_convert_batch_np(np.asarray(x), out_h, out_w)
+    if backend == "pallas":
+        return resize_convert_images(jnp.asarray(x), out_h, out_w,
+                                     interpret=interpret)
+    raise ValueError(f"unknown backend {backend!r}; options: auto/numpy/pallas")

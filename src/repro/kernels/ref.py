@@ -28,6 +28,25 @@ def normalize_images_ref(x: jax.Array, mean: jax.Array, std: jax.Array):
     return (xf - mean[None, :, None]) / std[None, :, None]
 
 
+def resize_convert_ref(x: jax.Array, out_h: int, out_w: int):
+    """Oracle for the fused resize+convert kernel: per-axis lerp in fp32 with
+    the same align-corners sample positions, conversion applied up front."""
+    b, h, w, c = x.shape
+    scale = {jnp.uint8: 255.0, jnp.uint16: 65535.0}.get(x.dtype.type, 1.0)
+    xf = x.astype(jnp.float32) / scale
+
+    def axis_lerp(arr, n_in, n_out, axis):
+        pos = jnp.linspace(0, n_in - 1, n_out)
+        lo = jnp.floor(pos).astype(jnp.int32)
+        hi = jnp.minimum(lo + 1, n_in - 1)
+        frac = (pos - lo).reshape([-1 if a == axis else 1
+                                   for a in range(arr.ndim)])
+        return (jnp.take(arr, lo, axis=axis) * (1 - frac)
+                + jnp.take(arr, hi, axis=axis) * frac)
+
+    return axis_lerp(axis_lerp(xf, h, out_h, 1), w, out_w, 2)
+
+
 # -- flash attention ---------------------------------------------------------
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal=True):
     """q/k/v: (BH, S, hd); naive softmax attention in fp32."""

@@ -157,6 +157,15 @@ class Trainer:
             self.checkpointer.wait()
         self._pending_saves = []
 
+    def close(self) -> None:
+        """Release the input pipeline: closes the data iterator end-to-end
+        (prefetcher threads, in-flight reader-pool work) when it supports it.
+        Training that abandons a ``repeat()`` pipeline mid-epoch must call
+        this (or rely on GC) to stop the background producer promptly."""
+        close = getattr(self.data_iter, "close", None)
+        if close is not None:
+            close()
+
     # -- diagnostics ---------------------------------------------------------
     def report(self) -> Dict[str, Any]:
         s = self.timer.summary()

@@ -9,6 +9,7 @@ except ModuleNotFoundError:  # bare env (see `test` extra in pyproject.toml)
     from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.kernels import ops, ref
+from repro.kernels import preprocess as _kpre
 from repro.kernels.quantize import BLOCK, dequantize_blocks, quantize_blocks
 
 
@@ -69,6 +70,65 @@ class TestPreprocessKernel:
         r = jnp.transpose(r.reshape(2, c, h, w), (0, 2, 3, 1))
         np.testing.assert_allclose(np.asarray(out), np.asarray(r),
                                    rtol=1e-4, atol=1e-5)
+
+
+class TestResizeConvertKernel:
+    @pytest.mark.parametrize("in_hw,out_hw", [
+        ((24, 20), (12, 16)), ((9, 13), (17, 8)), ((16, 16), (16, 16)),
+    ])
+    @pytest.mark.parametrize("c", [1, 3])
+    def test_pallas_matches_numpy_fallback(self, in_hw, out_hw, c):
+        rng = np.random.default_rng(sum(in_hw + out_hw))
+        x = rng.integers(0, 256, (3, *in_hw, c), dtype=np.uint8)
+        got = np.asarray(_kpre.resize_convert_images(
+            jnp.asarray(x), *out_hw))
+        want = _kpre.resize_convert_batch_np(x, *out_hw)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_pallas_matches_jnp_oracle(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.integers(0, 256, (2, 14, 18, 3), dtype=np.uint8))
+        got = _kpre.resize_convert_images(x, 7, 9)
+        want = ref.resize_convert_ref(x, 7, 9)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_matches_per_image_host_path(self):
+        from repro.core import records
+
+        rng = np.random.default_rng(1)
+        x = rng.integers(0, 256, (4, 20, 16, 3), dtype=np.uint8)
+        got = np.asarray(_kpre.resize_convert_images(jnp.asarray(x), 10, 8))
+        per_image = np.stack([
+            records.preprocess_image(records.encode_image(x[i]), 10, 8)
+            for i in range(4)
+        ])
+        np.testing.assert_allclose(got, per_image, rtol=1e-5, atol=1e-5)
+
+    def test_float_and_uint16_inputs(self):
+        rng = np.random.default_rng(2)
+        xf = rng.random((2, 10, 12, 1)).astype(np.float32)
+        np.testing.assert_allclose(
+            np.asarray(_kpre.resize_convert_images(jnp.asarray(xf), 5, 6)),
+            _kpre.resize_convert_batch_np(xf, 5, 6), rtol=1e-5, atol=1e-6)
+        xu = rng.integers(0, 65536, (2, 10, 12, 1)).astype(np.uint16)
+        got = np.asarray(_kpre.resize_convert_images(jnp.asarray(xu), 5, 6))
+        assert got.min() >= 0.0 and got.max() <= 1.0
+
+    def test_dispatcher_backends_agree(self):
+        rng = np.random.default_rng(3)
+        x = rng.integers(0, 256, (2, 12, 12, 3), dtype=np.uint8)
+        a = np.asarray(_kpre.resize_convert(x, 6, 6, backend="numpy"))
+        b = np.asarray(_kpre.resize_convert(x, 6, 6, backend="pallas"))
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+        with pytest.raises(ValueError):
+            _kpre.resize_convert(x, 6, 6, backend="tpu2000")
+
+    def test_jit_wrapper(self):
+        rng = np.random.default_rng(4)
+        x = jnp.asarray(rng.integers(0, 256, (2, 10, 10, 3), dtype=np.uint8))
+        out = ops.resize_convert_nhwc(x, 5, 5)
+        assert out.shape == (2, 5, 5, 3) and out.dtype == jnp.float32
 
 
 class TestFlashAttentionKernel:

@@ -74,6 +74,123 @@ class TestImageCodec:
         assert out.min() >= 0.0 and out.max() <= 1.0
 
 
+class TestZeroCopyDecode:
+    def _blob(self, payloads):
+        return b"".join(records.encode_record(p) for p in payloads)
+
+    def test_record_views_bytes_identical_to_copy_path(self):
+        payloads = [bytes([i]) * (10 + i * 7) for i in range(6)]
+        blob = self._blob(payloads)
+        views = list(records.iter_record_views(blob))
+        assert all(isinstance(v, memoryview) for v in views)
+        assert [bytes(v) for v in views] == list(records.decode_records(blob))
+        assert [bytes(v) for v in views] == payloads
+
+    def test_views_alias_blob_memory(self):
+        blob = self._blob([b"x" * 64])
+        (view,) = records.iter_record_views(blob)
+        assert view.obj is blob  # a slice of the original buffer, not a copy
+
+    def test_zero_copy_image_bytes_identical(self):
+        rng = np.random.default_rng(0)
+        img = rng.integers(0, 256, (23, 31, 3), dtype=np.uint8)
+        blob = records.encode_record(records.encode_image(img))
+        payload = records.decode_single_record(blob, copy=False)
+        view_arr = records.decode_image(payload, copy=False)
+        copy_arr = records.decode_image(records.decode_single_record(blob))
+        assert not view_arr.flags.owndata  # shares payload memory
+        assert not view_arr.flags.writeable
+        np.testing.assert_array_equal(view_arr, copy_arr)
+        assert view_arr.tobytes() == copy_arr.tobytes()
+
+    def test_zero_copy_corruption_still_detected(self):
+        blob = bytearray(self._blob([b"y" * 100]))
+        blob[30] ^= 0xFF
+        with pytest.raises(records.RecordError):
+            list(records.iter_record_views(bytes(blob)))
+
+
+class TestVectorizedResize:
+    @pytest.mark.parametrize("in_hw,out_hw", [
+        ((33, 47), (16, 24)), ((10, 10), (30, 20)), ((8, 9), (8, 9)),
+        ((64, 48), (7, 5)),
+    ])
+    @pytest.mark.parametrize("dtype", [np.float32, np.uint8])
+    def test_bit_identical_to_reference(self, in_hw, out_hw, dtype):
+        rng = np.random.default_rng(1)
+        if dtype == np.uint8:
+            img = rng.integers(0, 256, (*in_hw, 3), dtype=np.uint8)
+        else:
+            img = rng.random((*in_hw, 3)).astype(np.float32)
+        got = records.resize_image(img, *out_hw)
+        ref = records.resize_image_reference(img, *out_hw)
+        np.testing.assert_array_equal(got, ref)  # bit-identical, not allclose
+
+    def test_out_buffer_receives_result(self):
+        rng = np.random.default_rng(2)
+        img = rng.random((20, 30, 3)).astype(np.float32)
+        out = np.full((12, 14, 3), np.nan, np.float32)
+        res = records.resize_image(img, 12, 14, out=out)
+        assert res is out
+        np.testing.assert_array_equal(
+            out, records.resize_image_reference(img, 12, 14))
+
+    def test_batch_matches_per_image(self):
+        rng = np.random.default_rng(3)
+        imgs = rng.integers(0, 256, (5, 17, 13, 3), dtype=np.uint8)
+        batched = records.resize_batch(imgs, 9, 11)
+        for i in range(5):
+            np.testing.assert_array_equal(
+                batched[i], records.resize_image(imgs[i], 9, 11))
+
+    def test_lut_cached_across_calls(self):
+        records.bilinear_lut.cache_clear()
+        rng = np.random.default_rng(4)
+        for _ in range(3):
+            records.resize_image(rng.random((15, 15, 1)).astype(np.float32),
+                                 6, 6)
+        info = records.bilinear_lut.cache_info()
+        assert info.misses == 1 and info.hits == 2
+
+    def test_fused_preprocess_into_parity(self):
+        rng = np.random.default_rng(5)
+        for dtype, hi in ((np.uint8, 256), (np.uint16, 65536)):
+            img = rng.integers(0, hi, (26, 19, 3)).astype(dtype)
+            payload = records.encode_image(img)
+            out = np.empty((12, 10, 3), np.float32)
+            records.preprocess_image_into(payload, out)
+            legacy = records.preprocess_image(payload, 12, 10)
+            np.testing.assert_allclose(out, legacy, atol=1e-6)
+
+    def test_fused_preprocess_same_size_shortcut(self):
+        rng = np.random.default_rng(6)
+        img = rng.integers(0, 256, (8, 8, 3), dtype=np.uint8)
+        out = np.empty((8, 8, 3), np.float32)
+        records.preprocess_image_into(records.encode_image(img), out)
+        np.testing.assert_allclose(
+            out, records.preprocess_image(records.encode_image(img), 8, 8),
+            atol=1e-7)
+
+
+class TestShardedWriter:
+    def test_sharded_writer_roundtrip(self, tmp_storage):
+        paths, labels = records.write_sharded_image_dataset(
+            tmp_storage, 10, 4, mean_hw=(12, 12), n_classes=5, seed=0)
+        assert len(paths) == 3  # 4 + 4 + 2
+        assert [len(l) for l in labels] == [4, 4, 2]
+        views = list(records.iter_record_views(tmp_storage.read_file(paths[0])))
+        assert len(views) == 4
+        img = records.decode_image(views[0], copy=False)
+        assert img.ndim == 3 and img.dtype == np.uint8
+
+    def test_uniform_corpus_has_fixed_hw(self, tmp_storage):
+        paths, _ = records.write_sharded_image_dataset(
+            tmp_storage, 6, 3, mean_hw=(16, 20), hw_jitter=0.0, seed=0)
+        for p in paths:
+            for v in records.iter_record_views(tmp_storage.read_file(p)):
+                assert records.decode_image(v, copy=False).shape == (16, 20, 3)
+
+
 class TestWriters:
     def test_image_dataset_writer(self, tmp_storage):
         paths, labels = records.write_image_dataset(
