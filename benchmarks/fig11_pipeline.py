@@ -25,6 +25,7 @@ import tempfile
 
 sys.path.insert(0, "src")
 
+from repro import metrics
 from repro.core import make_storage, records
 from repro.core.microbench import run_microbench, run_sharded_microbench, \
     thread_scaling_sweep
@@ -40,7 +41,28 @@ TIME_SCALE = 1.0
 
 def run(tier="hdd", n_images=128, images_per_shard=16, mean_hw=(96, 96),
         out_hw=(32, 32), thread_counts=(1, 2, 4, 8), batch_size=32,
-        repeats=3, name="fig11_pipeline", json_path=None) -> dict:
+        repeats=3, name="fig11_pipeline", json_path=None,
+        metrics_jsonl=None) -> dict:
+    # live telemetry rides along: a Sampler snapshots the registry (reader
+    # pool occupancy, per-tier storage latency sketches, pipeline rates)
+    # into a JSONL time series CI uploads as an artifact
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    metrics_jsonl = metrics_jsonl or os.path.join(
+        RESULTS_DIR, "metrics_pipeline.jsonl")
+    metrics.start()
+    sampler = metrics.Sampler(interval_s=0.2, jsonl_path=metrics_jsonl)
+    sampler.start()
+    try:
+        return _run_sweep(tier, n_images, images_per_shard, mean_hw, out_hw,
+                          thread_counts, batch_size, repeats, name, json_path)
+    finally:
+        sampler.stop()
+        metrics.stop()
+        print(f"# wrote {metrics_jsonl} ({len(sampler.points())} samples)")
+
+
+def _run_sweep(tier, n_images, images_per_shard, mean_hw, out_hw,
+               thread_counts, batch_size, repeats, name, json_path) -> dict:
     with tempfile.TemporaryDirectory(dir=SCRATCH) as tmp:
         st = make_storage(tier, os.path.join(tmp, tier),
                           time_scale=TIME_SCALE)

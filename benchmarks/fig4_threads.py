@@ -1,36 +1,57 @@
 """Fig. 4 analogue: micro-benchmark ingestion bandwidth vs reader threads
-(full pipeline: read + decode + resize + batch), per storage tier."""
+(full pipeline: read + decode + resize + batch), per storage tier.
+
+Emits the usual CSV rows plus machine-readable ``BENCH_threads.json``
+(samples/s, bytes/s and thread-speedup per tier per thread count) so the
+perf-regression gate (``benchmarks/regression_gate.py``) can compare runs.
+
+    PYTHONPATH=src python -m benchmarks.fig4_threads [--smoke]
+"""
 from __future__ import annotations
+
+import json
+import os
+import sys
 
 from repro.core.microbench import thread_scaling_sweep
 
-from .common import BenchEnv, emit
+from .common import BenchEnv, RESULTS_DIR, emit
 
 
 def run(tiers=("hdd", "ssd", "optane", "lustre"), preprocess=True,
-        name="fig4_threads", pipeline="legacy") -> dict:
+        name="fig4_threads", pipeline="legacy", n_images=128,
+        mean_hw=(190, 190), thread_counts=(1, 2, 4, 8), repeats=3,
+        batch_size=32, out_hw=(32, 32), json_name="BENCH_threads.json",
+        time_scale=1.0) -> dict:
     # paper: ImageNet subset, median image 112 KB (~190x190x3 raw).
     # ``pipeline="vectorized"`` sweeps the fused map_and_batch read engine
     # instead of the seed per-element chain (thread-scaling shape should
     # match; absolute samples/s is higher — fig11 quantifies the gap).
-    env = BenchEnv(tiers=tiers, n_images=128, mean_hw=(190, 190),
-                   time_scale=1.0)
-    rows, speedups = [], {}
+    env = BenchEnv(tiers=tiers, n_images=n_images, mean_hw=mean_hw,
+                   time_scale=time_scale)
+    rows, speedups, result = [], {}, {}
     for tier in tiers:
         st = env.storages[tier]
         paths, _ = env.corpora[tier]
         st.drop_caches()
         results = thread_scaling_sweep(
-            st, paths, thread_counts=(1, 2, 4, 8), repeats=3,
-            batch_size=32, preprocess=preprocess, out_hw=(32, 32),
+            st, paths, thread_counts=thread_counts, repeats=repeats,
+            batch_size=batch_size, preprocess=preprocess, out_hw=out_hw,
             pipeline=pipeline)
         base = results[0].images_per_s
         sp = {r.threads: r.images_per_s / base for r in results}
         speedups[tier] = sp
+        per_threads = {}
         for r in results:
+            per_threads[str(r.threads)] = {
+                "samples_per_s": round(r.images_per_s, 2),
+                "bytes_per_s": round(r.total_bytes / r.seconds, 1),
+                "speedup": round(r.images_per_s / base, 3),
+            }
             rows.append(
                 f"{tier},threads={r.threads},img_s={r.images_per_s:.1f},"
                 f"mb_s={r.mb_per_s:.2f},speedup={r.images_per_s / base:.2f}")
+        result[tier] = per_threads
     derived = (
         f"hdd 2/4/8-thread speedup={speedups.get('hdd', {}).get(2, 0):.2f}/"
         f"{speedups.get('hdd', {}).get(4, 0):.2f}/"
@@ -39,8 +60,33 @@ def run(tiers=("hdd", "ssd", "optane", "lustre"), preprocess=True,
         f"{speedups.get('lustre', {}).get(8, 0):.2f} (paper 7.8)")
     emit(name, rows, derived)
     env.close()
-    return speedups
+
+    payload = {
+        "benchmark": name,
+        "config": {
+            "tiers": list(tiers), "preprocess": preprocess,
+            "pipeline": pipeline, "n_images": n_images,
+            "mean_hw": list(mean_hw), "out_hw": list(out_hw),
+            "batch_size": batch_size, "repeats": repeats,
+            "thread_counts": list(thread_counts), "time_scale": time_scale,
+        },
+        "tiers": result,
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out_json = os.path.join(RESULTS_DIR, json_name)
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {out_json}")
+    return payload
+
+
+def run_smoke(**overrides) -> dict:
+    """Tiny-scale CI variant: same shape of output, seconds of runtime."""
+    kw = dict(tiers=("hdd", "lustre"), n_images=32, mean_hw=(48, 48),
+              thread_counts=(1, 2), repeats=1, batch_size=8, out_hw=(16, 16))
+    kw.update(overrides)
+    return run(**kw)
 
 
 if __name__ == "__main__":
-    run()
+    run_smoke() if "--smoke" in sys.argv else run()

@@ -1,15 +1,33 @@
 """Fig. 5 analogue: pipeline with ONLY tf.read() (no decode/resize) —
 isolates preprocessing cost from raw I/O.  The read-only loader is shared
 by both pipeline generations (the vectorized engine only changes decode/
-batch), so one sweep covers both."""
+batch), so one sweep covers both.
+
+Writes machine-readable ``BENCH_read_only.json`` (same schema as
+``BENCH_threads.json``) for the perf-regression gate.
+
+    PYTHONPATH=src python -m benchmarks.fig5_read_only [--smoke]
+"""
 from __future__ import annotations
+
+import sys
 
 from . import fig4_threads
 
 
-def run() -> None:
-    fig4_threads.run(preprocess=False, name="fig5_read_only")
+def run(**overrides) -> dict:
+    kw = dict(preprocess=False, name="fig5_read_only",
+              json_name="BENCH_read_only.json")
+    kw.update(overrides)
+    return fig4_threads.run(**kw)
+
+
+def run_smoke(**overrides) -> dict:
+    kw = dict(preprocess=False, name="fig5_read_only",
+              json_name="BENCH_read_only.json")
+    kw.update(overrides)
+    return fig4_threads.run_smoke(**kw)
 
 
 if __name__ == "__main__":
-    run()
+    run_smoke() if "--smoke" in sys.argv else run()

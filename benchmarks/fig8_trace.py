@@ -8,7 +8,9 @@ Emits:
   Perfetto / chrome://tracing) with spans attributed to storage reads,
   decode/map, prefetch, checkpoint writes and burst-buffer drains;
 * ``reports/fig8_trace.md`` — Darshan-style markdown report: per-stage
-  bytes, op counts, p50/p95/p99 latencies, compute/input overlap ratio;
+  bytes, op counts, p50/p95/p99 latencies, compute/input overlap ratio,
+  plus a :mod:`repro.metrics` gauge timeline (prefetch occupancy, drain
+  backlog, reader-pool depth) sampled live during the run;
 * the usual ``name,key=val`` CSV rows.
 """
 from __future__ import annotations
@@ -19,7 +21,7 @@ import tempfile
 import jax
 import jax.numpy as jnp
 
-from repro import trace
+from repro import metrics, trace
 from repro.configs import ALEXNET_SMOKE as CFG
 from repro.core import make_storage, records
 from repro.core.burst_buffer import BurstBufferCheckpointer
@@ -72,6 +74,9 @@ def run(name: str = "fig8_trace") -> dict:
     _, _ = train_step(state, next(iter(warm)))
 
     tracer = trace.start()  # -- everything below is attributed ------------
+    metrics.start()         # gauge timeline rides along in the report
+    sampler = metrics.Sampler(interval_s=0.05)
+    sampler.start()
     ds = image_pipeline(data_st, paths, labels, batch_size=8,
                         num_parallel_calls=4, prefetch=2,
                         out_hw=(CFG.in_hw, CFG.in_hw), repeat=True)
@@ -82,6 +87,9 @@ def run(name: str = "fig8_trace") -> dict:
     tr.run(N_STEPS)
     ckpt.wait()
     ckpt.close()
+    sampler.stop()
+    metric_points = sampler.points()
+    metrics.stop()
     trace.stop()
 
     spans = tracer.spans()
@@ -97,7 +105,7 @@ def run(name: str = "fig8_trace") -> dict:
     with open(md_path, "w") as f:
         f.write(trace.to_markdown(
             spans, title="AlexNet mini-app I/O trace (fig8)",
-            counters=counters))
+            counters=counters, metrics_series=metric_points))
 
     rows = []
     for st in stats.values():

@@ -1,0 +1,182 @@
+"""CI perf-regression gate over the machine-readable ``BENCH_*.json`` files.
+
+Each benchmark that matters writes a JSON payload under ``reports/``
+(fig4 -> ``BENCH_threads.json``, fig5 -> ``BENCH_read_only.json``,
+fig11 -> ``BENCH_pipeline.json``).  This gate compares those against the
+committed baselines in ``benchmarks/baselines/`` and exits nonzero when a
+**throughput** metric regressed beyond tolerance.
+
+Rules:
+
+* Payloads are flattened to dotted numeric leaf paths
+  (``tiers.hdd.2.samples_per_s``); only higher-is-better leaves are gated —
+  those whose last path segment is in :data:`GATED_LEAVES`.  Everything
+  else (configs, booleans, counts) is context, not a gate.
+* A gated leaf passes iff ``new >= old * (1 - tolerance)``.  Improvements
+  never fail the gate (ratcheting baselines up is ``--update``'s job).
+* If the payload ``config`` sections differ, the file is **skipped with a
+  warning** — a changed sweep shape makes number-to-number comparison
+  meaningless, and the right fix is re-seeding, not a red build.
+* A baseline with no matching report is a failure (the benchmark silently
+  disappeared) unless ``--allow-missing``.
+
+Usage::
+
+    python -m benchmarks.regression_gate            # tolerance 0.25
+    python -m benchmarks.regression_gate --smoke    # tolerance 0.50 (CI)
+    python -m benchmarks.regression_gate --update   # reseed baselines
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from typing import Dict, List, Tuple
+
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+REPORTS_DIR = os.environ.get("REPRO_BENCH_DIR", "reports")
+
+# higher-is-better throughput leaves; latency metrics would need the
+# opposite sense and are deliberately not gated here
+GATED_LEAVES = ("samples_per_s", "bytes_per_s", "speedup",
+                "speedup_sharded_vs_legacy")
+
+DEFAULT_TOLERANCE = 0.25
+SMOKE_TOLERANCE = 0.50   # tiny sweeps on shared CI boxes are noisy
+
+
+def flatten(obj, prefix: str = "") -> Dict[str, float]:
+    """Numeric leaves of a nested dict as ``{dotted.path: value}``."""
+    out: Dict[str, float] = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(flatten(v, f"{prefix}{k}."))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        out[prefix[:-1]] = float(obj)
+    return out
+
+
+def gated_leaves(payload: dict) -> Dict[str, float]:
+    return {path: v for path, v in flatten(payload).items()
+            if path.split(".")[-1] in GATED_LEAVES}
+
+
+def compare(baseline: dict, new: dict, tolerance: float,
+            name: str = "?") -> Tuple[List[str], List[str]]:
+    """Return ``(regressions, notes)`` for one payload pair."""
+    regressions: List[str] = []
+    notes: List[str] = []
+    if baseline.get("config") != new.get("config"):
+        notes.append(
+            f"SKIP {name}: config changed (baseline stale — rerun "
+            f"`--update` after reviewing)")
+        return regressions, notes
+    base = gated_leaves(baseline)
+    cur = gated_leaves(new)
+    for path, old in sorted(base.items()):
+        if path not in cur:
+            regressions.append(f"{name}:{path} disappeared "
+                               f"(baseline {old:.6g})")
+            continue
+        floor = old * (1.0 - tolerance)
+        if cur[path] < floor:
+            regressions.append(
+                f"{name}:{path} regressed: {cur[path]:.6g} < "
+                f"{old:.6g} - {tolerance:.0%} (floor {floor:.6g})")
+    if not base:
+        notes.append(f"NOTE {name}: no gated leaves in baseline")
+    return regressions, notes
+
+
+def _baseline_files() -> List[str]:
+    if not os.path.isdir(BASELINE_DIR):
+        return []
+    return sorted(f for f in os.listdir(BASELINE_DIR)
+                  if f.startswith("BENCH_") and f.endswith(".json"))
+
+
+def update_baselines() -> int:
+    """Copy every ``reports/BENCH_*.json`` into the baseline dir."""
+    os.makedirs(BASELINE_DIR, exist_ok=True)
+    copied = 0
+    for f in sorted(os.listdir(REPORTS_DIR)):
+        if f.startswith("BENCH_") and f.endswith(".json"):
+            shutil.copyfile(os.path.join(REPORTS_DIR, f),
+                            os.path.join(BASELINE_DIR, f))
+            print(f"seeded baseline {f}")
+            copied += 1
+    if copied == 0:
+        print(f"no BENCH_*.json under {REPORTS_DIR}/ — run the benchmarks "
+              "first", file=sys.stderr)
+        return 1
+    return 0
+
+
+def main(argv=None) -> int:
+    global REPORTS_DIR
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="allowed fractional regression (default "
+                         f"{DEFAULT_TOLERANCE})")
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"CI smoke mode: tolerance {SMOKE_TOLERANCE}")
+    ap.add_argument("--update", action="store_true",
+                    help="reseed baselines from the current reports")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="a baseline without a matching report is skipped, "
+                         "not failed")
+    ap.add_argument("--reports-dir", default=REPORTS_DIR)
+    args = ap.parse_args(argv)
+
+    REPORTS_DIR = args.reports_dir
+    if args.update:
+        return update_baselines()
+
+    tolerance = args.tolerance if args.tolerance is not None else (
+        SMOKE_TOLERANCE if args.smoke else DEFAULT_TOLERANCE)
+
+    files = _baseline_files()
+    if not files:
+        print(f"no baselines under {BASELINE_DIR}/ — seed with --update",
+              file=sys.stderr)
+        return 1
+
+    all_regressions: List[str] = []
+    checked = 0
+    for fname in files:
+        with open(os.path.join(BASELINE_DIR, fname)) as f:
+            baseline = json.load(f)
+        report_path = os.path.join(REPORTS_DIR, fname)
+        if not os.path.exists(report_path):
+            msg = f"{fname}: report missing under {REPORTS_DIR}/"
+            if args.allow_missing:
+                print(f"SKIP {msg}")
+                continue
+            all_regressions.append(msg)
+            continue
+        with open(report_path) as f:
+            new = json.load(f)
+        regs, notes = compare(baseline, new, tolerance, name=fname)
+        for n in notes:
+            print(n)
+        all_regressions.extend(regs)
+        checked += 1
+        n_leaves = len(gated_leaves(baseline))
+        status = "FAIL" if regs else "ok"
+        print(f"{status} {fname}: {n_leaves} gated leaves, "
+              f"tolerance {tolerance:.0%}")
+
+    if all_regressions:
+        print(f"\n{len(all_regressions)} perf regression(s):",
+              file=sys.stderr)
+        for r in all_regressions:
+            print(f"  - {r}", file=sys.stderr)
+        return 1
+    print(f"\nregression gate passed ({checked} report(s) checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

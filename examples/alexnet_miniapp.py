@@ -5,6 +5,11 @@
 Generates a Caltech-101-like corpus on a simulated tier, trains AlexNet with
 the full input pipeline, and prints per-step data-wait vs compute (the
 paper's prefetch-overlap observable) plus a dstat-style I/O trace.
+
+``--trace OUT.json`` adds per-op span collection (Chrome trace + Darshan
+report); ``--metrics OUT.jsonl`` adds live telemetry (sampled gauge/counter
+time series, Prometheus snapshot, per-step stall detection).  The two
+compose: with both, the trace report embeds the metrics timeline.
 """
 import argparse, os, sys, tempfile
 sys.path.insert(0, "src")
@@ -12,7 +17,7 @@ sys.path.insert(0, "src")
 import jax
 import jax.numpy as jnp
 
-from repro import trace
+from repro import metrics, trace
 from repro.configs import ALEXNET_SMOKE as CFG
 from repro.core import IOTracer, image_pipeline, make_storage, \
     sharded_image_pipeline
@@ -35,6 +40,12 @@ def main():
                     help="collect per-op spans and write a Chrome trace "
                          "(open in Perfetto); also prints the per-stage "
                          "Darshan-style report")
+    ap.add_argument("--metrics", metavar="OUT.jsonl", default=None,
+                    help="enable live telemetry: sample the metrics "
+                         "registry (prefetch occupancy, storage latency "
+                         "sketches, per-step heartbeat) into a JSONL time "
+                         "series and print the final Prometheus-text "
+                         "snapshot; composes with --trace")
     args = ap.parse_args()
 
     tracer = IOTracer(0.25)
@@ -73,7 +84,14 @@ def main():
         return {"params": new_p, "step": state["step"] + 1}, {"loss": loss}
 
     collector = trace.start() if args.trace else None
-    tr = Trainer(train_step, state, iter(ds))
+    sampler = None
+    stall = None
+    if args.metrics:
+        metrics.start()
+        sampler = metrics.Sampler(interval_s=0.1, jsonl_path=args.metrics)
+        sampler.start()
+        stall = metrics.StallDetector(min_samples=4)
+    tr = Trainer(train_step, state, iter(ds), stall_detector=stall)
     tr.run(args.steps)
     tr.close()  # repeat() pipeline: stop the prefetch producer promptly
     rep = tr.report()
@@ -84,6 +102,16 @@ def main():
     print(f"  losses: {[round(h['loss'], 3) for h in tr.history]}")
     print("dstat-style read trace (MB/s):")
     print(tracer.to_csv())
+    metric_points = None
+    if sampler is not None:
+        sampler.stop()
+        metric_points = sampler.points()
+        print(f"\nmetrics time series written to {args.metrics} "
+              f"({len(metric_points)} samples)")
+        print(metrics.to_prometheus_text(metrics.get_registry()))
+        if stall is not None and stall.events:
+            print(f"stalls detected: {stall.summary()}")
+        metrics.stop()
     if collector is not None:
         trace.stop()
         trace.dump_chrome_trace(collector, args.trace,
@@ -91,7 +119,8 @@ def main():
         print(f"\nChrome trace written to {args.trace}")
         print(trace.to_markdown(collector.spans(),
                                 title="Per-stage I/O report",
-                                counters=collector.counters()))
+                                counters=collector.counters(),
+                                metrics_series=metric_points))
 
 
 if __name__ == "__main__":

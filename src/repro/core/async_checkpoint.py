@@ -38,7 +38,7 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, List, Optional
 
-from .. import trace
+from .. import metrics, trace
 from .checkpoint import CheckpointSaver, SaveResult, flatten_pytree
 
 
@@ -106,20 +106,29 @@ class AsyncCheckpointer:
              extra_meta: Optional[dict] = None) -> AsyncSaveHandle:
         if self._executor is None:
             raise RuntimeError("AsyncCheckpointer is closed")
+        m = metrics.enabled()
         t0 = time.monotonic()
         self._sema.acquire()  # backpressure: at most max_pending snapshots
         try:
+            t_snap = time.monotonic()
             with trace.span(trace.STAGE_CKPT_SNAPSHOT,
                             f"snapshot:{self.prefix}-{step}") as sp:
                 flat, treedef = flatten_pytree(tree, copy=True)
                 sp.set_bytes(sum(a.nbytes for a in flat.values()))
+            if m:
+                metrics.observe("ckpt.snapshot_s",
+                                time.monotonic() - t_snap, ckpt=self.prefix)
             fut = self._executor.submit(self._write, step, flat, extra_meta,
                                         treedef)
+            if m:
+                metrics.add_gauge("ckpt.pending_saves", 1, ckpt=self.prefix)
         except BaseException:
             self._sema.release()
             raise
         blocked = time.monotonic() - t0
         self.blocked_s.append(blocked)
+        if m:
+            metrics.observe("ckpt.blocked_s", blocked, ckpt=self.prefix)
         handle = AsyncSaveHandle(step, fut, blocked)
         # keep only unsettled and failed-but-unreported handles: the list
         # must not grow with run length
@@ -130,10 +139,17 @@ class AsyncCheckpointer:
 
     # -- writer thread -------------------------------------------------------
     def _write(self, step: int, flat, extra_meta, treedef) -> SaveResult:
+        t0 = time.monotonic()
         try:
-            return self.saver.save_flat(step, flat, extra_meta, treedef=treedef)
+            res = self.saver.save_flat(step, flat, extra_meta, treedef=treedef)
+            if metrics.enabled():
+                metrics.observe("ckpt.write_s", time.monotonic() - t0,
+                                ckpt=self.prefix)
+                metrics.inc("ckpt.saves", 1, ckpt=self.prefix)
+            return res
         finally:
             self._sema.release()
+            metrics.add_gauge("ckpt.pending_saves", -1, ckpt=self.prefix)
 
     # -- consumer-side API ----------------------------------------------------
     def wait(self) -> None:

@@ -27,7 +27,7 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, List, Optional
 
-from .. import trace
+from .. import metrics, trace
 from .checkpoint import CheckpointSaver, SaveResult, CHECKPOINT_MARKER
 
 
@@ -123,6 +123,10 @@ class BurstBufferCheckpointer:
     def save(self, step: int, tree: Any, extra_meta: Optional[dict] = None) -> SaveResult:
         r = self.fast_saver.save(step, tree, extra_meta)
         self.blocked_s.append(r.seconds)  # only the fast-tier write blocks
+        if metrics.enabled():
+            metrics.observe("ckpt.staged_s", r.seconds, ckpt=self.prefix)
+            metrics.add_gauge("ckpt.drain_backlog_bytes", r.n_bytes,
+                              ckpt=self.prefix)
         with self._pending_lock:
             self._pending.append(step)
         job = (step, list(r.files), r.n_bytes, time.monotonic(), r.seconds)
@@ -202,6 +206,12 @@ class BurstBufferCheckpointer:
             DrainRecord(step, n_bytes, staged_s, time.monotonic() - t0,
                         time.monotonic())
         )
+        if metrics.enabled():
+            metrics.observe("ckpt.drain_s", time.monotonic() - t0,
+                            ckpt=self.prefix)
+            metrics.inc("ckpt.drains", 1, ckpt=self.prefix)
+            metrics.add_gauge("ckpt.drain_backlog_bytes", -n_bytes,
+                              ckpt=self.prefix)
 
     def _slow_steps(self) -> List[int]:
         import json

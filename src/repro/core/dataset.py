@@ -55,7 +55,7 @@ from typing import Any, Callable, Iterable, Iterator, List, Optional, Sequence
 
 import numpy as np
 
-from .. import trace
+from .. import metrics, trace
 from .prefetcher import PrefetchIterator
 from .readerpool import reader_pool
 
@@ -213,11 +213,14 @@ class Dataset:
         def safe_fn(item):
             # one decode-stage span per element; nested storage_read spans
             # (from fn's read_file call) attribute the I/O share of this time
-            with trace.span(trace.STAGE_DECODE, fn_label):
+            with trace.span(trace.STAGE_DECODE, fn_label), \
+                    metrics.timer("pipeline.decode_s"):
                 try:
-                    return fn(item)
+                    out = fn(item)
                 except Exception as e:  # surfaced at the iterator (TF semantics)
                     return _ErrorMarker(e)
+                metrics.inc("pipeline.records")
+                return out
 
         if num_parallel_calls <= 1:
             def gen_serial():
@@ -290,7 +293,8 @@ class Dataset:
 
             Returns ``(values, exhausted)``; per-element failures append a
             marker and retire the slot."""
-            with trace.span(trace.STAGE_DECODE, fn_label):
+            with trace.span(trace.STAGE_DECODE, fn_label), \
+                    metrics.timer("pipeline.interleave_block_s"):
                 out: List[Any] = []
                 if slot.it is None:
                     try:
@@ -368,6 +372,9 @@ class Dataset:
             try:
                 for item in it:
                     if isinstance(item, _ErrorMarker):
+                        # live drop-rate signal (a corpus going bad shows up
+                        # here long before accuracy does)
+                        metrics.inc("pipeline.dropped")
                         continue
                     yield item
             finally:
@@ -452,6 +459,7 @@ class Dataset:
                     raise _Exhausted from None
                 if isinstance(item, _ErrorMarker):
                     if ignore_errors:
+                        metrics.inc("pipeline.dropped")
                         continue
                     raise item.exc
                 return item
@@ -462,8 +470,11 @@ class Dataset:
             return buf[i] if out_shape else buf[i:i + 1].reshape(())
 
         def _run(item, row):
-            with trace.span(trace.STAGE_DECODE, fn_label):
-                return fn(item, row)
+            with trace.span(trace.STAGE_DECODE, fn_label), \
+                    metrics.timer("pipeline.decode_s"):
+                out = fn(item, row)
+            metrics.inc("pipeline.records")
+            return out
 
         def _assemble(buf, aux, rows):
             """Finalize one batch from the filled row indices."""
@@ -490,6 +501,7 @@ class Dataset:
                                     aux[i] = _run(item, _row(buf, i))
                                 except Exception as e:
                                     if ignore_errors:
+                                        metrics.inc("pipeline.dropped")
                                         continue
                                     yield _ErrorMarker(e)
                                     return
@@ -539,6 +551,7 @@ class Dataset:
                                 aux[row] = f.result()
                                 filled.append(row)
                             elif ignore_errors:
+                                metrics.inc("pipeline.dropped")
                                 to_fill.append(row)  # refill from upstream
                             elif error is None:
                                 error = exc

@@ -35,6 +35,7 @@ from __future__ import annotations
 import threading
 from typing import List, Optional, Sequence
 
+from .. import metrics
 from .storage import Storage
 
 
@@ -107,15 +108,18 @@ class FaultyStorage(Storage):
             if op not in self._ops:
                 return
             if self._tripped and self.sticky:
+                metrics.inc("storage.faults_injected", 1, op=op)
                 raise FaultInjected(f"injected fault (sticky) on {op}({path!r})")
             if self._fail_substring is not None and self._fail_substring in path:
                 self._tripped = True
+                metrics.inc("storage.faults_injected", 1, op=op)
                 raise FaultInjected(
                     f"injected fault on {op}({path!r}) matching "
                     f"{self._fail_substring!r}")
             if self._fail_after is not None:
                 if self._count >= self._fail_after:
                     self._tripped = True
+                    metrics.inc("storage.faults_injected", 1, op=op)
                     raise FaultInjected(
                         f"injected fault on {op}({path!r}) after "
                         f"{self._count} ops")

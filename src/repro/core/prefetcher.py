@@ -17,11 +17,13 @@ pipeline releases its background thread end-to-end.
 """
 from __future__ import annotations
 
+import itertools
 import threading
+import time
 from collections import deque
 from typing import Any, Iterable, Iterator, Optional
 
-from .. import trace
+from .. import metrics, trace
 
 
 class _Sentinel:
@@ -29,6 +31,8 @@ class _Sentinel:
 
 
 _END = _Sentinel()
+
+_iter_ids = itertools.count()
 
 
 class PrefetchIterator:
@@ -40,6 +44,7 @@ class PrefetchIterator:
         self._upstream = iter(upstream)
         self._buffer_size = buffer_size
         self._buffer: deque = deque()
+        self._mid = next(_iter_ids)  # metrics label: one series per iterator
         self._cond = threading.Condition()
         self._done = False          # producer finished (or errored)
         self._error: Optional[BaseException] = None
@@ -58,6 +63,8 @@ class PrefetchIterator:
                         item = next(self._upstream)
                     except StopIteration:
                         return
+                m = metrics.enabled()
+                t0 = time.monotonic() if m else 0.0
                 with self._cond:
                     while len(self._buffer) >= self._buffer_size and not self._closed:
                         self._cond.wait()
@@ -65,6 +72,14 @@ class PrefetchIterator:
                         return
                     self._buffer.append(item)
                     trace.count("prefetch_buffer", len(self._buffer))
+                    if m:
+                        # producer stall: buffer full, consumer too slow —
+                        # the healthy state (compute-bound training)
+                        metrics.observe("prefetch.producer_stall_s",
+                                        time.monotonic() - t0, it=self._mid)
+                        metrics.inc("prefetch.produced", 1, it=self._mid)
+                        metrics.set_gauge("prefetch.occupancy",
+                                          len(self._buffer), it=self._mid)
                     self._cond.notify_all()
         except BaseException as e:  # propagate to consumer
             with self._cond:
@@ -88,11 +103,21 @@ class PrefetchIterator:
         return self
 
     def __next__(self) -> Any:
+        m = metrics.enabled()
+        t0 = time.monotonic() if m else 0.0
         with self._cond:
             while not self._buffer and not self._done:
                 self._cond.wait()
             if self._buffer:
                 item = self._buffer.popleft()
+                if m:
+                    # consumer wait: buffer starved, producer too slow —
+                    # the paper's data-wait observable, live per element
+                    metrics.observe("prefetch.consumer_wait_s",
+                                    time.monotonic() - t0, it=self._mid)
+                    metrics.inc("prefetch.consumed", 1, it=self._mid)
+                    metrics.set_gauge("prefetch.occupancy",
+                                      len(self._buffer), it=self._mid)
                 self._cond.notify_all()
                 return item
             if self._error is not None:

@@ -26,6 +26,8 @@ import threading
 from concurrent.futures import Future
 from typing import Any, Callable, List, Optional
 
+from .. import metrics
+
 _counter = itertools.count()
 
 
@@ -39,6 +41,17 @@ class ReaderPool:
         self._threads: List[threading.Thread] = []
         self._lock = threading.Lock()
         self._shutdown = False
+        self._inflight = 0
+        # polled occupancy gauges: pool capacity, tasks queued behind busy
+        # workers, tasks currently executing.  queue_depth > 0 while
+        # inflight == size is the live "ReaderPool saturated" signal.
+        pool = f"{name}-{self._id}"
+        metrics.register_gauge("readerpool.size",
+                               lambda: len(self._threads), pool=pool)
+        metrics.register_gauge("readerpool.queue_depth",
+                               self._work.qsize, pool=pool)
+        metrics.register_gauge("readerpool.inflight",
+                               lambda: self._inflight, pool=pool)
 
     # -- sizing ----------------------------------------------------------------
     @property
@@ -71,15 +84,22 @@ class ReaderPool:
             fut, fn, args, kwargs = item
             if not fut.set_running_or_notify_cancel():
                 continue
+            with self._lock:
+                self._inflight += 1
             try:
                 fut.set_result(fn(*args, **kwargs))
             except BaseException as e:
                 fut.set_exception(e)
+            finally:
+                with self._lock:
+                    self._inflight -= 1
+                metrics.inc("readerpool.completed")
 
     def submit(self, fn: Callable, *args: Any, **kwargs: Any) -> Future:
         if not self._threads:
             self.ensure(1)
         fut: Future = Future()
+        metrics.inc("readerpool.submitted")
         self._work.put((fut, fn, args, kwargs))
         return fut
 
@@ -94,6 +114,10 @@ class ReaderPool:
             self._work.put(None)
         for t in threads:
             t.join(timeout=5.0)
+        pool = f"{self._name}-{self._id}"
+        for g in ("readerpool.size", "readerpool.queue_depth",
+                  "readerpool.inflight"):
+            metrics.unregister_gauge(g, pool=pool)
 
 
 _global_pool: Optional[ReaderPool] = None

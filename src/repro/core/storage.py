@@ -33,8 +33,16 @@ from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, List, Optional
 
-from .. import trace
+from .. import metrics, trace
 from .stats import IOTracer
+
+
+def _op_metrics(op: str, tier: str, nbytes: int, dur_s: float) -> None:
+    """Per-tier op/bytes counters + latency sketch (one enabled() check at
+    each call site keeps the disabled path allocation-free)."""
+    metrics.inc(f"storage.{op}_ops", 1, tier=tier)
+    metrics.inc(f"storage.{op}_bytes", nbytes, tier=tier)
+    metrics.observe(f"storage.{op}_s", dur_s, tier=tier)
 
 
 # ---------------------------------------------------------------------------
@@ -159,25 +167,35 @@ class NativeStorage(Storage):
         return os.path.join(self.root, path)
 
     def read_file(self, path: str) -> bytes:
+        m = metrics.enabled()
+        t0 = time.monotonic() if m else 0.0
         with trace.span(trace.STAGE_STORAGE_READ, path) as sp:
             with open(self._abs(path), "rb") as f:
                 data = f.read()
             sp.set_bytes(len(data))
+        if m:
+            _op_metrics("read", self.name, len(data), time.monotonic() - t0)
         if self.tracer:
             self.tracer.record("read", len(data), path)
         return data
 
     def read_range(self, path: str, offset: int, length: int) -> bytes:
+        m = metrics.enabled()
+        t0 = time.monotonic() if m else 0.0
         with trace.span(trace.STAGE_STORAGE_READ, path) as sp:
             with open(self._abs(path), "rb") as f:
                 f.seek(offset)
                 data = f.read(length)
             sp.set_bytes(len(data))
+        if m:
+            _op_metrics("read", self.name, len(data), time.monotonic() - t0)
         if self.tracer:
             self.tracer.record("read", len(data), path)
         return data
 
     def write_file(self, path: str, data: bytes, sync: bool = False) -> None:
+        m = metrics.enabled()
+        t0 = time.monotonic() if m else 0.0
         with trace.span(trace.STAGE_STORAGE_WRITE, path, len(data)):
             ap = self._abs(path)
             os.makedirs(os.path.dirname(ap) or ".", exist_ok=True)
@@ -186,10 +204,14 @@ class NativeStorage(Storage):
                 if sync:
                     f.flush()
                     os.fsync(f.fileno())
+        if m:
+            _op_metrics("write", self.name, len(data), time.monotonic() - t0)
         if self.tracer:
             self.tracer.record("write", len(data), path)
 
     def append_file(self, path: str, data: bytes, sync: bool = False) -> None:
+        m = metrics.enabled()
+        t0 = time.monotonic() if m else 0.0
         with trace.span(trace.STAGE_STORAGE_WRITE, path, len(data)):
             ap = self._abs(path)
             os.makedirs(os.path.dirname(ap) or ".", exist_ok=True)
@@ -198,6 +220,8 @@ class NativeStorage(Storage):
                 if sync:
                     f.flush()
                     os.fsync(f.fileno())
+        if m:
+            _op_metrics("write", self.name, len(data), time.monotonic() - t0)
         if self.tracer:
             self.tracer.record("write", len(data), path)
 
@@ -363,6 +387,9 @@ class SimulatedStorage(Storage):
                            self._read_bucket)
             finally:
                 self._exit()
+        # metric latency covers the modelled device time (pacing included)
+        if metrics.enabled():
+            _op_metrics("read", self.name, len(data), time.monotonic() - t0)
         if self.tracer:
             self.tracer.record("read", len(data), path)
         return data
@@ -380,6 +407,8 @@ class SimulatedStorage(Storage):
                            self._read_bucket)
             finally:
                 self._exit()
+        if metrics.enabled():
+            _op_metrics("read", self.name, len(data), time.monotonic() - t0)
         if self.tracer:
             self.tracer.record("read", len(data), path)
         return data
@@ -401,6 +430,8 @@ class SimulatedStorage(Storage):
                            self._write_bucket)
             finally:
                 self._exit()
+        if metrics.enabled():
+            _op_metrics("write", self.name, len(data), time.monotonic() - t0)
         if self.tracer:
             self.tracer.record("write", len(data), path)
 
@@ -417,6 +448,8 @@ class SimulatedStorage(Storage):
                            self._write_bucket)
             finally:
                 self._exit()
+        if metrics.enabled():
+            _op_metrics("write", self.name, len(data), time.monotonic() - t0)
         if self.tracer:
             self.tracer.record("write", len(data), path)
 

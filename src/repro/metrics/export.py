@@ -1,0 +1,224 @@
+"""Exporters: Prometheus text exposition + JSONL snapshots.
+
+Two formats, two purposes:
+
+* **Prometheus text** (:func:`to_prometheus_text`) — the live-scrape view.
+  Counters and gauges render as ``name{labels} value``; histograms render
+  in the standard cumulative form (``_bucket{le="..."}`` rows from the
+  sketch's log buckets, plus ``_sum``/``_count``).  :func:`from_prometheus_
+  text` parses the same schema back, and rendering is canonical (sorted,
+  ``repr`` floats), so ``text -> parse -> render`` is the identity — the
+  round-trip tests rely on this.
+* **JSONL** (:func:`dump_jsonl` / :func:`load_jsonl`) — the archival view:
+  one JSON object per line, each a full ``MetricsRegistry.collect()``
+  snapshot *including raw sketch buckets*, so quantiles recompute exactly
+  after a round-trip.  The :class:`~repro.metrics.sampler.Sampler` appends
+  one line per tick, giving a time series CI uploads as an artifact.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, Iterable, List, Optional, Tuple, Union
+
+from .registry import MetricsRegistry, hist_quantile, parse_name, render_name
+
+
+def _sanitize(name: str) -> str:
+    """Prometheus metric names: dots become underscores."""
+    return name.replace(".", "_").replace("-", "_")
+
+
+def _fmt(v: float) -> str:
+    """Canonical float rendering (repr round-trips exactly in Python)."""
+    f = float(v)
+    if f == int(f) and abs(f) < 1e15:
+        return str(int(f))
+    return repr(f)
+
+
+def hist_le_buckets(snap: dict) -> List[Tuple[float, int]]:
+    """Cumulative ``(le_upper_bound, count)`` pairs for one sketch snapshot
+    (the Prometheus histogram series, shared with the round-trip tests)."""
+    gamma = snap["gamma"]
+    buckets = {int(k): v for k, v in snap["buckets"].items()}
+    out: List[Tuple[float, int]] = []
+    cum = snap["zero"]
+    if cum:
+        out.append((0.0, cum))
+    for idx in sorted(buckets):
+        cum += buckets[idx]
+        out.append((gamma ** idx, cum))
+    return out
+
+
+def to_prometheus_text(snapshot: Union[dict, MetricsRegistry]) -> str:
+    """Render a ``collect()`` snapshot (or a live registry) as Prometheus
+    text exposition."""
+    if isinstance(snapshot, MetricsRegistry):
+        snapshot = snapshot.collect()
+    lines: List[str] = []
+    typed: set = set()  # one "# TYPE" line per metric family
+
+    def _type(base: str, kind: str) -> None:
+        if base not in typed:
+            typed.add(base)
+            lines.append(f"# TYPE {base} {kind}")
+
+    def _series(rendered: str, value: float, extra_label: str = "") -> str:
+        name, labels = parse_name(rendered)
+        labels = list(labels)
+        if extra_label:
+            k, v = extra_label.split("=", 1)
+            labels.append((k, v))
+        return f"{render_name(_sanitize(name), tuple(labels))} {_fmt(value)}"
+
+    for rendered in sorted(snapshot.get("counters", {})):
+        name, _ = parse_name(rendered)
+        _type(_sanitize(name), "counter")
+        lines.append(_series(rendered, snapshot["counters"][rendered]))
+    for rendered in sorted(snapshot.get("gauges", {})):
+        name, _ = parse_name(rendered)
+        _type(_sanitize(name), "gauge")
+        lines.append(_series(rendered, snapshot["gauges"][rendered]))
+    for rendered in sorted(snapshot.get("histograms", {})):
+        hsnap = snapshot["histograms"][rendered]
+        name, labels = parse_name(rendered)
+        base = _sanitize(name)
+        _type(base, "histogram")
+        for le, cum in hist_le_buckets(hsnap):
+            lines.append(_series(
+                render_name(f"{base}_bucket", labels), cum,
+                extra_label=f"le={_fmt(le)}"))
+        lines.append(_series(
+            render_name(f"{base}_bucket", labels), hsnap["count"],
+            extra_label="le=+Inf"))
+        lines.append(_series(render_name(f"{base}_sum", labels),
+                             hsnap["sum"]))
+        lines.append(_series(render_name(f"{base}_count", labels),
+                             hsnap["count"]))
+    return "\n".join(lines) + "\n"
+
+
+def from_prometheus_text(text: str) -> dict:
+    """Parse Prometheus text exposition back into a snapshot-shaped dict.
+
+    Histograms come back in cumulative ``le``-bucket form (the sketch's
+    internal log indices are not recoverable from the exposition), keyed
+    under ``"histograms_le"``: ``{rendered_name: {"buckets": [(le, cum)],
+    "sum": s, "count": n}}``.  Counters and gauges round-trip exactly.
+    """
+    types: Dict[str, str] = {}
+    counters: Dict[str, float] = {}
+    gauges: Dict[str, float] = {}
+    hists: Dict[str, dict] = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        if line.startswith("#"):
+            parts = line.split()
+            if len(parts) >= 4 and parts[1] == "TYPE":
+                types[parts[2]] = parts[3]
+            continue
+        series, _, value = line.rpartition(" ")
+        name, labels = parse_name(series)
+        v = float(value)
+        base, kind = name, None
+        for suffix in ("_bucket", "_sum", "_count"):
+            stem = name[: -len(suffix)] if name.endswith(suffix) else None
+            if stem is not None and types.get(stem) == "histogram":
+                base, kind = stem, suffix
+                break
+        if kind is not None:
+            le = [lv for lk, lv in labels if lk == "le"]
+            rest = tuple((lk, lv) for lk, lv in labels if lk != "le")
+            h = hists.setdefault(render_name(base, rest),
+                                 {"buckets": [], "sum": 0.0, "count": 0})
+            if kind == "_bucket":
+                if le and le[0] != "+Inf":
+                    h["buckets"].append((float(le[0]), int(v)))
+            elif kind == "_sum":
+                h["sum"] = v
+            else:
+                h["count"] = int(v)
+        elif types.get(name) == "counter":
+            counters[series] = v
+        else:
+            gauges[series] = v
+    for h in hists.values():
+        h["buckets"].sort()
+    return dict(counters=counters, gauges=gauges, histograms_le=hists)
+
+
+# ---------------------------------------------------------------------------
+# JSONL snapshots
+# ---------------------------------------------------------------------------
+def snapshot_to_json(snapshot: dict) -> str:
+    """One snapshot -> one JSON line (sketch buckets included: lossless)."""
+    return json.dumps(snapshot, sort_keys=True, separators=(",", ":"))
+
+
+def snapshot_from_json(line: str) -> dict:
+    """Inverse of :func:`snapshot_to_json`; bucket keys re-int-ified."""
+    snap = json.loads(line)
+    for h in snap.get("histograms", {}).values():
+        h["buckets"] = {int(k): v for k, v in h["buckets"].items()}
+    return snap
+
+
+def dump_jsonl(snapshots: Iterable[dict], path: str) -> None:
+    with open(path, "w") as f:
+        for snap in snapshots:
+            f.write(snapshot_to_json(snap) + "\n")
+
+
+def load_jsonl(path: str) -> List[dict]:
+    out: List[dict] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(snapshot_from_json(line))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Trace-report attachment
+# ---------------------------------------------------------------------------
+def series_markdown(snapshots: List[dict], max_gauges: int = 32) -> List[str]:
+    """Render a sampled snapshot series as markdown lines — the gauge
+    timeline section :func:`repro.trace.report.to_markdown` attaches under
+    a per-stage span report (fig8: occupancy/backlog alongside spans)."""
+    if not snapshots:
+        return ["_no metric samples_"]
+    names: List[str] = []
+    for snap in snapshots:
+        for k in snap.get("gauges", {}):
+            if k not in names:
+                names.append(k)
+    lines = [f"{len(snapshots)} samples, "
+             f"t={snapshots[0].get('t', 0.0):.2f}s .. "
+             f"{snapshots[-1].get('t', 0.0):.2f}s", ""]
+    for name in names[:max_gauges]:
+        vals = [s["gauges"][name] for s in snapshots
+                if name in s.get("gauges", {})]
+        if not vals:
+            continue
+        lines.append(
+            f"- `{name}`: first={vals[0]:.3g} last={vals[-1]:.3g} "
+            f"min={min(vals):.3g} max={max(vals):.3g} ({len(vals)} pts)")
+    last = snapshots[-1]
+    if last.get("counters"):
+        lines += ["", "final counters:", ""]
+        for k in sorted(last["counters"]):
+            lines.append(f"- `{k}` = {last['counters'][k]:.6g}")
+    if last.get("histograms"):
+        lines += ["", "final latency sketches (p50/p95/p99 ms):", ""]
+        for k in sorted(last["histograms"]):
+            h = last["histograms"][k]
+            lines.append(
+                f"- `{k}`: n={h['count']} "
+                f"p50={hist_quantile(h, 50) * 1e3:.2f} "
+                f"p95={hist_quantile(h, 95) * 1e3:.2f} "
+                f"p99={hist_quantile(h, 99) * 1e3:.2f}")
+    return lines

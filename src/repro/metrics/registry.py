@@ -1,0 +1,508 @@
+"""Process-wide metrics registry: counters, gauges, streaming histograms.
+
+Where :mod:`repro.trace` answers *what happened* (a post-hoc span log),
+``repro.metrics`` answers *what is happening now*: is the prefetch buffer
+starved, is the ReaderPool saturated, is the burst-buffer drain falling
+behind.  tf-Darshan (arXiv:2008.04395) argues DL I/O needs always-on,
+low-overhead performance data; this module is the always-on half.
+
+Design constraints (same discipline as the tracer):
+
+* **Near-zero overhead when disabled.**  The module-level :func:`inc` /
+  :func:`observe` / :func:`set_gauge` / :func:`timer` helpers check one
+  global and return immediately (or hand back a shared no-op singleton) —
+  no allocation, nothing to GC.  Instrumented call sites stay in hot paths
+  permanently.
+* **Lock-free hot path when enabled.**  :class:`Counter` and
+  :class:`Histogram` shard their state per thread (a cell is registered
+  once per thread under a lock, then mutated lock-free under the GIL);
+  reads merge the shards.  Many threads bumping one counter never contend.
+* **Bounded memory.**  Histograms are fixed log-bucket sketches (DDSketch
+  geometry): ``observe(v)`` lands in bucket ``ceil(log_gamma(v))`` with
+  ``gamma = (1+alpha)/(1-alpha)``, so any quantile is recoverable to a
+  **relative error <= alpha** without storing samples, and sketches from
+  different threads merge by adding bucket counts.
+
+Instruments are keyed by ``(name, labels)`` — Prometheus-style — so one
+metric family (``storage.read_bytes``) carries per-tier series
+(``{tier="hdd"}``).  :meth:`MetricsRegistry.collect` snapshots everything
+into a plain dict the exporters (:mod:`repro.metrics.export`) and the
+:class:`~repro.metrics.sampler.Sampler` consume.
+"""
+from __future__ import annotations
+
+import math
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+LabelKey = Tuple[Tuple[str, str], ...]
+
+
+def _label_key(labels: Dict[str, Any]) -> LabelKey:
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+def render_name(name: str, labels: LabelKey = ()) -> str:
+    """Canonical ``name{k="v",...}`` rendering used as the snapshot key."""
+    if not labels:
+        return name
+    inner = ",".join(f'{k}="{v}"' for k, v in labels)
+    return f"{name}{{{inner}}}"
+
+
+def parse_name(rendered: str) -> Tuple[str, LabelKey]:
+    """Inverse of :func:`render_name` (exporters round-trip through this)."""
+    if "{" not in rendered:
+        return rendered, ()
+    name, _, rest = rendered.partition("{")
+    rest = rest.rstrip("}")
+    labels = []
+    for part in filter(None, rest.split(",")):
+        k, _, v = part.partition("=")
+        labels.append((k, v.strip('"')))
+    return name, tuple(sorted(labels))
+
+
+# ---------------------------------------------------------------------------
+# Instruments
+# ---------------------------------------------------------------------------
+class _Cell:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+
+class Counter:
+    """Monotonic counter, sharded per thread (lock only on first touch)."""
+
+    def __init__(self):
+        self._local = threading.local()
+        self._lock = threading.Lock()
+        self._cells: List[_Cell] = []
+
+    def _cell(self) -> _Cell:
+        c = getattr(self._local, "cell", None)
+        if c is None:
+            c = _Cell()
+            with self._lock:
+                self._cells.append(c)
+            self._local.cell = c
+        return c
+
+    def inc(self, value: float = 1.0) -> None:
+        if value < 0:
+            raise ValueError(f"counters only go up, got {value}")
+        self._cell().value += value
+
+    def value(self) -> float:
+        with self._lock:
+            return float(sum(c.value for c in self._cells))
+
+
+class Gauge:
+    """Point-in-time value: ``set()`` replaces, ``add()`` accumulates
+    (e.g. a backlog that grows on enqueue and shrinks on drain)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._value = 0.0
+
+    def set(self, value: float) -> None:
+        with self._lock:
+            self._value = float(value)
+
+    def add(self, delta: float) -> None:
+        with self._lock:
+            self._value += delta
+
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+
+class FunctionGauge:
+    """Gauge polled at collect time (pool size, queue depth, ...)."""
+
+    def __init__(self, fn: Callable[[], float]):
+        self._fn = fn
+
+    def value(self) -> Optional[float]:
+        try:
+            return float(self._fn())
+        except Exception:
+            return None  # a dead provider must not poison collection
+
+
+class _HistShard:
+    __slots__ = ("buckets", "count", "sum", "min", "max", "zero")
+
+    def __init__(self):
+        self.buckets: Dict[int, int] = {}
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+        self.zero = 0  # values <= 0 (log bucket undefined)
+
+
+class Histogram:
+    """Streaming log-bucket sketch (DDSketch geometry), per-thread sharded.
+
+    ``observe(v)`` costs one ``math.log``, one dict increment and a few
+    scalar updates — no samples are retained.  ``quantile(q)`` merges the
+    thread shards and walks the cumulative bucket counts; the returned
+    estimate is the bucket midpoint ``2*gamma^i/(gamma+1)``, which is
+    within ``alpha`` relative error of the true sample at that rank.
+    """
+
+    def __init__(self, alpha: float = 0.05):
+        if not 0.0 < alpha < 1.0:
+            raise ValueError(f"alpha must be in (0, 1), got {alpha}")
+        self.alpha = alpha
+        self.gamma = (1.0 + alpha) / (1.0 - alpha)
+        self._lgamma = math.log(self.gamma)
+        self._local = threading.local()
+        self._lock = threading.Lock()
+        self._shards: List[_HistShard] = []
+
+    def _shard(self) -> _HistShard:
+        s = getattr(self._local, "shard", None)
+        if s is None:
+            s = _HistShard()
+            with self._lock:
+                self._shards.append(s)
+            self._local.shard = s
+        return s
+
+    def observe(self, value: float) -> None:
+        s = self._shard()
+        v = float(value)
+        s.count += 1
+        s.sum += v
+        if v < s.min:
+            s.min = v
+        if v > s.max:
+            s.max = v
+        if v <= 0.0:
+            s.zero += 1
+            return
+        idx = math.ceil(math.log(v) / self._lgamma)
+        s.buckets[idx] = s.buckets.get(idx, 0) + 1
+
+    # -- merged views --------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Merge all thread shards into a plain-dict sketch (the exchange
+        format: JSON-serializable, mergeable, quantile-queryable)."""
+        with self._lock:
+            shards = list(self._shards)
+        buckets: Dict[int, int] = {}
+        count = 0
+        total = 0.0
+        vmin = math.inf
+        vmax = -math.inf
+        zero = 0
+        for s in shards:
+            count += s.count
+            total += s.sum
+            zero += s.zero
+            if s.min < vmin:
+                vmin = s.min
+            if s.max > vmax:
+                vmax = s.max
+            for idx, n in s.buckets.items():
+                buckets[idx] = buckets.get(idx, 0) + n
+        return dict(
+            gamma=self.gamma,
+            count=count,
+            sum=total,
+            min=(vmin if count else 0.0),
+            max=(vmax if count else 0.0),
+            zero=zero,
+            buckets=buckets,
+        )
+
+    def quantile(self, q: float) -> float:
+        return hist_quantile(self.snapshot(), q)
+
+    def count(self) -> int:
+        return int(self.snapshot()["count"])
+
+
+def hist_quantile(snap: dict, q: float) -> float:
+    """Quantile from a sketch snapshot (works on live or deserialized
+    sketches; JSON round-trips may have stringified bucket keys)."""
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"q must be in [0, 100], got {q}")
+    count = snap["count"]
+    if count == 0:
+        return 0.0
+    gamma = snap["gamma"]
+    rank = max(0, math.ceil(q / 100.0 * count) - 1)  # 0-based target rank
+    if rank < snap["zero"]:
+        return min(0.0, snap["min"])
+    # JSON round-trips stringify the bucket keys — normalize to ints
+    buckets = {int(k): v for k, v in snap["buckets"].items()}
+    seen = snap["zero"]
+    for idx in sorted(buckets):
+        seen += buckets[idx]
+        if rank < seen:
+            # bucket i covers (gamma^(i-1), gamma^i]; midpoint minimizes
+            # worst-case relative error to alpha
+            est = 2.0 * gamma ** idx / (gamma + 1.0)
+            return min(max(est, snap["min"]), snap["max"])
+    return snap["max"]
+
+
+def merge_hist_snapshots(a: dict, b: dict) -> dict:
+    """Merge two sketches (same gamma) — cross-process/thread aggregation."""
+    if a["gamma"] != b["gamma"]:
+        raise ValueError("cannot merge sketches with different gamma")
+    buckets = {int(k): v for k, v in a["buckets"].items()}
+    for k, v in b["buckets"].items():
+        k = int(k)
+        buckets[k] = buckets.get(k, 0) + v
+    count = a["count"] + b["count"]
+    return dict(
+        gamma=a["gamma"],
+        count=count,
+        sum=a["sum"] + b["sum"],
+        min=(min(a["min"], b["min"]) if count else 0.0),
+        max=(max(a["max"], b["max"]) if count else 0.0),
+        zero=a["zero"] + b["zero"],
+        buckets=buckets,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+class MetricsRegistry:
+    """Thread-safe instrument registry.
+
+    Instrument creation takes a lock once per ``(name, labels)``; the
+    returned instruments are lock-free on their hot paths.  ``collect()``
+    snapshots every instrument into a plain dict keyed by the canonical
+    rendered name.
+    """
+
+    def __init__(self, enabled: bool = True, alpha: float = 0.05):
+        self.enabled = enabled
+        self.alpha = alpha
+        self._epoch = time.monotonic()
+        self._lock = threading.Lock()
+        self._counters: Dict[Tuple[str, LabelKey], Counter] = {}
+        self._gauges: Dict[Tuple[str, LabelKey], Gauge] = {}
+        self._fn_gauges: Dict[Tuple[str, LabelKey], FunctionGauge] = {}
+        self._hists: Dict[Tuple[str, LabelKey], Histogram] = {}
+
+    # -- instrument access (get-or-create) -----------------------------------
+    def counter(self, name: str, **labels) -> Counter:
+        key = (name, _label_key(labels))
+        c = self._counters.get(key)
+        if c is None:
+            with self._lock:
+                c = self._counters.setdefault(key, Counter())
+        return c
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        key = (name, _label_key(labels))
+        g = self._gauges.get(key)
+        if g is None:
+            with self._lock:
+                g = self._gauges.setdefault(key, Gauge())
+        return g
+
+    def histogram(self, name: str, alpha: Optional[float] = None,
+                  **labels) -> Histogram:
+        key = (name, _label_key(labels))
+        h = self._hists.get(key)
+        if h is None:
+            with self._lock:
+                h = self._hists.setdefault(
+                    key, Histogram(self.alpha if alpha is None else alpha))
+        return h
+
+    def register_gauge(self, name: str, fn: Callable[[], float],
+                       **labels) -> None:
+        """Register a polled gauge callback (replaces any previous one
+        under the same name+labels)."""
+        key = (name, _label_key(labels))
+        with self._lock:
+            self._fn_gauges[key] = FunctionGauge(fn)
+
+    def unregister_gauge(self, name: str, **labels) -> None:
+        key = (name, _label_key(labels))
+        with self._lock:
+            self._fn_gauges.pop(key, None)
+
+    # -- snapshot -------------------------------------------------------------
+    def collect(self) -> dict:
+        """Snapshot all instruments: ``{"t", "counters", "gauges",
+        "histograms"}`` with canonical rendered-name keys."""
+        with self._lock:
+            counters = dict(self._counters)
+            gauges = dict(self._gauges)
+            fn_gauges = dict(self._fn_gauges)
+            hists = dict(self._hists)
+        out_g: Dict[str, float] = {}
+        for (name, labels), g in gauges.items():
+            out_g[render_name(name, labels)] = g.value()
+        for (name, labels), fg in fn_gauges.items():
+            v = fg.value()
+            if v is not None:
+                out_g[render_name(name, labels)] = v
+        return dict(
+            t=time.monotonic() - self._epoch,
+            counters={render_name(n, ls): c.value()
+                      for (n, ls), c in counters.items()},
+            gauges=out_g,
+            histograms={render_name(n, ls): h.snapshot()
+                        for (n, ls), h in hists.items()},
+        )
+
+
+# ---------------------------------------------------------------------------
+# Module-level API (what instrumented call sites use)
+# ---------------------------------------------------------------------------
+class _NullMetric:
+    """Shared do-nothing instrument/context for the disabled path."""
+
+    __slots__ = ()
+
+    def inc(self, value: float = 1.0) -> None:
+        pass
+
+    def set(self, value: float) -> None:
+        pass
+
+    def add(self, delta: float) -> None:
+        pass
+
+    def observe(self, value: float) -> None:
+        pass
+
+    def __enter__(self) -> "_NullMetric":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        return False
+
+
+NULL_METRIC = _NullMetric()
+
+
+class _Timer:
+    """Context manager that observes its wall time into a histogram."""
+
+    __slots__ = ("_hist", "_t0")
+
+    def __init__(self, hist: Histogram):
+        self._hist = hist
+
+    def __enter__(self) -> "_Timer":
+        self._t0 = time.monotonic()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self._hist.observe(time.monotonic() - self._t0)
+        return False
+
+
+_active: Optional[MetricsRegistry] = None
+
+
+def get_registry() -> Optional[MetricsRegistry]:
+    return _active
+
+
+def set_registry(reg: Optional[MetricsRegistry]) -> Optional[MetricsRegistry]:
+    global _active
+    _active = reg
+    return reg
+
+
+def start(enabled: bool = True, alpha: float = 0.05) -> MetricsRegistry:
+    """Install (and return) a fresh global registry; persistent gauge
+    providers (see :func:`register_gauge`) re-attach automatically."""
+    reg = set_registry(MetricsRegistry(enabled=enabled, alpha=alpha))
+    _attach_providers(reg)
+    return reg
+
+
+def stop() -> Optional[MetricsRegistry]:
+    """Uninstall the global registry (its instruments stay readable)."""
+    global _active
+    r, _active = _active, None
+    return r
+
+
+def enabled() -> bool:
+    r = _active
+    return r is not None and r.enabled
+
+
+def inc(name: str, value: float = 1.0, **labels) -> None:
+    r = _active
+    if r is not None and r.enabled:
+        r.counter(name, **labels).inc(value)
+
+
+def observe(name: str, value: float, **labels) -> None:
+    r = _active
+    if r is not None and r.enabled:
+        r.histogram(name, **labels).observe(value)
+
+
+def set_gauge(name: str, value: float, **labels) -> None:
+    r = _active
+    if r is not None and r.enabled:
+        r.gauge(name, **labels).set(value)
+
+
+def add_gauge(name: str, delta: float, **labels) -> None:
+    r = _active
+    if r is not None and r.enabled:
+        r.gauge(name, **labels).add(delta)
+
+
+def timer(name: str, **labels):
+    """``with metrics.timer("pipeline.decode_s"):`` — observes wall time
+    into a histogram; the shared no-op singleton when disabled."""
+    r = _active
+    if r is None or not r.enabled:
+        return NULL_METRIC
+    return _Timer(r.histogram(name, **labels))
+
+
+def register_gauge(name: str, fn: Callable[[], float], **labels) -> None:
+    """Register a polled gauge provider.
+
+    Providers are remembered even while no registry is installed (the
+    process-global ReaderPool may outlive many ``start()``/``stop()``
+    cycles), and re-attach to every subsequently started registry."""
+    with _providers_lock:
+        _providers[(name, _label_key(labels))] = fn
+    r = _active
+    if r is not None:
+        r.register_gauge(name, fn, **labels)
+
+
+def unregister_gauge(name: str, **labels) -> None:
+    with _providers_lock:
+        _providers.pop((name, _label_key(labels)), None)
+    r = _active
+    if r is not None:
+        r.unregister_gauge(name, **labels)
+
+
+_providers: Dict[Tuple[str, LabelKey], Callable[[], float]] = {}
+_providers_lock = threading.Lock()
+
+
+def _attach_providers(reg: MetricsRegistry) -> None:
+    with _providers_lock:
+        items = list(_providers.items())
+    for (name, labels), fn in items:
+        reg.register_gauge(name, fn, **dict(labels))

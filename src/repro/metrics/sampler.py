@@ -1,0 +1,104 @@
+"""Background sampler: periodic registry snapshots -> time series.
+
+Counters and sketches accumulate; gauges are instantaneous — to see a
+*timeline* (buffer occupancy over the run, backlog draining, records/s)
+something must snapshot the registry periodically.  :class:`Sampler` is
+that something: a daemon thread that calls ``registry.collect()`` every
+``interval_s``, keeps a bounded in-memory series, and optionally appends
+each snapshot as a JSONL line (the CI perf artifact; see
+:mod:`repro.metrics.export`).
+
+The thread holds no locks while sleeping and tolerates slow ticks (it
+never tries to "catch up" — a missed tick is a missed sample, matching
+dstat semantics from the paper's §IV-B methodology).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Deque, List, Optional
+
+from . import registry as _registry
+from .export import snapshot_to_json
+from .registry import MetricsRegistry
+
+
+class Sampler:
+    """Periodic gauge/counter snapshotter with optional JSONL sink."""
+
+    def __init__(
+        self,
+        registry: Optional[MetricsRegistry] = None,
+        interval_s: float = 0.5,
+        jsonl_path: Optional[str] = None,
+        max_points: int = 10_000,
+    ):
+        if interval_s <= 0:
+            raise ValueError(f"interval_s must be positive, got {interval_s}")
+        self._registry = registry
+        self.interval_s = float(interval_s)
+        self.jsonl_path = jsonl_path
+        self._points: Deque[dict] = deque(maxlen=max_points)
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._file = None
+        self._lock = threading.Lock()
+
+    def _reg(self) -> Optional[MetricsRegistry]:
+        return self._registry or _registry.get_registry()
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "Sampler":
+        if self._thread is not None:
+            return self
+        if self.jsonl_path:
+            self._file = open(self.jsonl_path, "w")
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self._run, name="metrics-sampler", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, timeout: Optional[float] = 10.0) -> None:
+        """Stop the thread; takes one final sample so short runs (shorter
+        than ``interval_s``) still land at least one point."""
+        t = self._thread
+        if t is None:
+            return
+        self._stop.set()
+        t.join(timeout)
+        self._thread = None
+        self.sample_now()
+        if self._file is not None:
+            self._file.close()
+            self._file = None
+
+    def __enter__(self) -> "Sampler":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.stop()
+
+    # -- sampling ------------------------------------------------------------
+    def sample_now(self) -> Optional[dict]:
+        """Take one snapshot immediately (also used by the tick loop)."""
+        reg = self._reg()
+        if reg is None:
+            return None
+        snap = reg.collect()
+        with self._lock:
+            self._points.append(snap)
+            if self._file is not None:
+                self._file.write(snapshot_to_json(snap) + "\n")
+                self._file.flush()
+        return snap
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            self.sample_now()
+
+    def points(self) -> List[dict]:
+        """Snapshot series collected so far (oldest first)."""
+        with self._lock:
+            return list(self._points)

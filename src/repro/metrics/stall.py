@@ -1,0 +1,171 @@
+"""Stall detection: flag training steps that fall off the rolling baseline.
+
+The paper's Fig. 6 observable — data-wait vs compute per step — is a
+*post-hoc* average.  In production the question is live: did *this* step
+stall (storage hiccup, drain backlog, prefetch starvation)?
+:class:`StallDetector` keeps a rolling window of recent step durations and
+trips when a step exceeds ``factor x`` the window's ``quantile`` —
+a rolling-percentile threshold rather than a fixed SLO, so the detector
+adapts as batch size, tier, or model change.
+
+On a trip it captures a **diagnostic snapshot**: the full metrics registry
+state (``registry.collect()``) plus the tail of the active trace's spans —
+the two views needed to answer *why* (which stage's latency moved, which
+gauge was pinned).  Snapshots attach to the :class:`StallEvent` and are
+optionally dumped as JSON files under ``snapshot_dir``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, List, Optional
+
+from . import registry as _registry
+
+
+def _rolling_percentile(xs, q: float) -> float:
+    # local copy of trace.report.percentile semantics (avoid a cycle:
+    # trace.report imports nothing from metrics, but keep layers parallel)
+    n = len(xs)
+    if n == 0:
+        return 0.0
+    s = sorted(xs)
+    if n == 1:
+        return float(s[0])
+    pos = (q / 100.0) * (n - 1)
+    lo = int(pos)
+    hi = min(lo + 1, n - 1)
+    frac = pos - lo
+    return float(s[lo] * (1.0 - frac) + s[hi] * frac)
+
+
+@dataclass
+class StallEvent:
+    """One tripped step: duration vs the threshold that flagged it."""
+
+    step: int
+    duration_s: float
+    threshold_s: float
+    baseline_s: float          # the rolling percentile the threshold scaled
+    t: float                   # monotonic-ish time of the trip
+    snapshot: Optional[dict] = field(default=None, repr=False)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        return d
+
+
+class StallDetector:
+    """Rolling-percentile step-duration watchdog.
+
+    ``observe(step, duration_s)`` is called once per training step.  Once
+    ``min_samples`` durations are in the window, a step longer than
+    ``factor * percentile(window, quantile)`` (and ``min_duration_s``)
+    trips the detector:
+
+    * a :class:`StallEvent` is appended to :attr:`events`;
+    * a metrics+trace snapshot is captured (see :meth:`capture_snapshot`);
+    * ``on_stall(event)`` fires if given;
+    * the event is ALSO excluded from the rolling window, so one stall
+      does not inflate the baseline and mask the next one.
+
+    Thread-safe: the trainer calls ``observe`` from its loop, but tests and
+    multi-trainer setups may share a detector.
+    """
+
+    def __init__(
+        self,
+        window: int = 64,
+        quantile: float = 95.0,
+        factor: float = 3.0,
+        min_samples: int = 8,
+        min_duration_s: float = 0.0,
+        snapshot_dir: Optional[str] = None,
+        trace_tail: int = 256,
+        on_stall: Optional[Callable[[StallEvent], None]] = None,
+    ):
+        if window < 2:
+            raise ValueError(f"window must be >= 2, got {window}")
+        if factor <= 1.0:
+            raise ValueError(f"factor must exceed 1.0, got {factor}")
+        self.quantile = quantile
+        self.factor = factor
+        self.min_samples = max(2, min_samples)
+        self.min_duration_s = min_duration_s
+        self.snapshot_dir = snapshot_dir
+        self.trace_tail = trace_tail
+        self.on_stall = on_stall
+        self.events: List[StallEvent] = []
+        self._window: Deque[float] = deque(maxlen=window)
+        self._lock = threading.Lock()
+        self._epoch = time.monotonic()
+
+    # -- the per-step hook ---------------------------------------------------
+    def observe(self, step: int, duration_s: float) -> Optional[StallEvent]:
+        with self._lock:
+            tripped = False
+            baseline = threshold = 0.0
+            if len(self._window) >= self.min_samples:
+                baseline = _rolling_percentile(self._window, self.quantile)
+                threshold = max(self.factor * baseline, self.min_duration_s)
+                tripped = duration_s > threshold > 0.0
+            if not tripped:
+                self._window.append(duration_s)
+        if not tripped:
+            return None
+        event = StallEvent(
+            step=step,
+            duration_s=duration_s,
+            threshold_s=threshold,
+            baseline_s=baseline,
+            t=time.monotonic() - self._epoch,
+            snapshot=self.capture_snapshot(step),
+        )
+        with self._lock:
+            self.events.append(event)
+        if self.snapshot_dir:
+            self._dump(event)
+        if self.on_stall is not None:
+            self.on_stall(event)
+        return event
+
+    # -- diagnostics ---------------------------------------------------------
+    def capture_snapshot(self, step: int) -> dict:
+        """Metrics registry state + active-trace span tail, as plain data."""
+        snap: dict = {"step": step}
+        reg = _registry.get_registry()
+        if reg is not None:
+            snap["metrics"] = reg.collect()
+        from .. import trace  # late: trace never imports metrics
+
+        tracer = trace.get_tracer()
+        if tracer is not None:
+            spans = tracer.spans()[-self.trace_tail:]
+            snap["trace_spans"] = [
+                dict(stage=r.stage, name=r.name, tid=r.tid, thread=r.thread,
+                     t0=r.t0, dur=r.dur, nbytes=r.nbytes)
+                for r in spans
+            ]
+        return snap
+
+    def _dump(self, event: StallEvent) -> str:
+        os.makedirs(self.snapshot_dir, exist_ok=True)
+        path = os.path.join(self.snapshot_dir,
+                            f"stall_step{event.step}.json")
+        with open(path, "w") as f:
+            json.dump(event.to_dict(), f, indent=2)
+        return path
+
+    def summary(self) -> dict:
+        with self._lock:
+            return dict(
+                stalls=len(self.events),
+                window_len=len(self._window),
+                baseline_p_s=_rolling_percentile(self._window, self.quantile),
+                steps=[e.step for e in self.events],
+            )

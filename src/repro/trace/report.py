@@ -148,8 +148,14 @@ def overlap_ratio(
 # Markdown report
 # ---------------------------------------------------------------------------
 def to_markdown(spans: Iterable[SpanRecord], title: str = "I/O trace report",
-                counters=None) -> str:
-    """Render the Darshan-style summary as a markdown document."""
+                counters=None, metrics_series=None) -> str:
+    """Render the Darshan-style summary as a markdown document.
+
+    ``metrics_series`` attaches a sampled :mod:`repro.metrics` snapshot
+    series (list of ``MetricsRegistry.collect()`` dicts, e.g.
+    ``Sampler.points()``) as a gauge-timeline section below the span table —
+    fig8's occupancy/backlog view alongside the per-stage latencies.
+    """
     spans = list(spans)
     stats = aggregate(spans)
     lines = [f"# {title}", ""]
@@ -163,10 +169,15 @@ def to_markdown(spans: Iterable[SpanRecord], title: str = "I/O trace report",
         f"**{len({r.tid for r in spans})}** threads",
         f"- wall clock covered: **{wall:.3f} s**",
     ]
-    ov = overlap_ratio(spans)
-    if any(r.stage == STAGE_COMPUTE for r in spans):
+    # overlap is only meaningful against nonzero compute busy-time: a
+    # read-only run (fig5) or one with zero-duration compute spans would
+    # otherwise print a misleading 0.00%
+    compute_busy = sum(
+        t1 - t0 for t0, t1 in busy_intervals(spans, (STAGE_COMPUTE,)))
+    if compute_busy > 0.0:
         lines.append(
-            f"- compute / input-pipeline overlap ratio: **{ov:.2%}** "
+            f"- compute / input-pipeline overlap ratio: "
+            f"**{overlap_ratio(spans):.2%}** "
             "(1.0 = I/O fully hidden behind compute)"
         )
     lines += [
@@ -189,4 +200,10 @@ def to_markdown(spans: Iterable[SpanRecord], title: str = "I/O trace report",
                 f"- `{name}`: {len(vals)} samples, min={min(vals):.1f} "
                 f"p50={percentile(vals, 50):.1f} max={max(vals):.1f}"
             )
+    if metrics_series:
+        # late import: trace must stay importable without metrics
+        from ..metrics.export import series_markdown
+
+        lines += ["", "## Metrics timeline", ""]
+        lines += series_markdown(metrics_series)
     return "\n".join(lines) + "\n"

@@ -31,6 +31,7 @@ from typing import Any, Callable, Dict, Iterable, List, Optional
 import jax
 import numpy as np
 
+from .. import metrics as live_metrics
 from .. import trace
 from ..core.stats import StepTimer
 
@@ -48,6 +49,7 @@ class Trainer:
         straggler_threshold: float = 0.2,
         install_sigterm: bool = False,
         on_step: Optional[Callable[[int, Dict], None]] = None,
+        stall_detector=None,                   # repro.metrics.StallDetector
     ):
         self.train_step = train_step
         self.state = state
@@ -57,6 +59,7 @@ class Trainer:
         self.timer = StepTimer()
         self.straggler_threshold = straggler_threshold
         self.on_step = on_step
+        self.stall_detector = stall_detector
         self.history: List[Dict] = []
         self._stop_requested = False
         self._pending_saves: List[Any] = []  # AsyncSaveHandle-like objects
@@ -97,6 +100,15 @@ class Trainer:
             step = self.step
             metrics["step"] = step
             self.history.append(metrics)
+            # live heartbeat: the paper's Fig. 6 observable, per step
+            if live_metrics.enabled():
+                live_metrics.inc("trainer.steps")
+                live_metrics.observe("trainer.data_wait_s", t1 - t0)
+                live_metrics.observe("trainer.compute_s", t2 - t1)
+                live_metrics.set_gauge("trainer.step_s", t2 - t0)
+                live_metrics.set_gauge("trainer.last_step", step)
+            if self.stall_detector is not None:
+                self.stall_detector.observe(step, t2 - t0)
             if self.on_step:
                 self.on_step(step, metrics)
 
@@ -184,4 +196,6 @@ class Trainer:
             pending_async_saves=sum(
                 1 for h in self._pending_saves if not h.done()
             ),
+            stalls=(self.stall_detector.summary()
+                    if self.stall_detector is not None else None),
         )

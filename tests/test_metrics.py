@@ -1,0 +1,633 @@
+"""repro.metrics subsystem: registry, sketches, exporters, sampler, stall."""
+import json
+import os
+import threading
+import time
+import tracemalloc
+
+import pytest
+
+from repro import metrics
+from repro.metrics.export import _sanitize
+from repro.metrics.registry import MetricsRegistry
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from _hypothesis_fallback import given, settings, strategies as st
+
+
+@pytest.fixture(autouse=True)
+def _no_global_registry():
+    """Each test starts and ends with no global registry installed."""
+    metrics.stop()
+    yield
+    metrics.stop()
+
+
+# ---------------------------------------------------------------------------
+# name rendering
+# ---------------------------------------------------------------------------
+class TestNames:
+    def test_render_parse_roundtrip(self):
+        for name, labels in [
+            ("a.b", ()),
+            ("storage.read_bytes", (("tier", "hdd"),)),
+            ("x", (("a", "1"), ("b", "2"))),
+        ]:
+            rendered = metrics.render_name(name, labels)
+            assert metrics.parse_name(rendered) == (name, labels)
+
+    def test_labels_canonically_sorted(self):
+        reg = MetricsRegistry()
+        reg.counter("c", b="2", a="1").inc(5)
+        (key,) = reg.collect()["counters"]
+        assert key == 'c{a="1",b="2"}'
+
+
+# ---------------------------------------------------------------------------
+# counters / gauges
+# ---------------------------------------------------------------------------
+class TestCounter:
+    def test_inc_and_value(self):
+        reg = MetricsRegistry()
+        c = reg.counter("ops")
+        c.inc()
+        c.inc(2.5)
+        assert c.value() == 3.5
+
+    def test_negative_increment_rejected(self):
+        with pytest.raises(ValueError):
+            MetricsRegistry().counter("ops").inc(-1)
+
+    def test_concurrent_increments_exact(self):
+        """Many threads bumping the same counter must lose no increments —
+        the per-thread-cell design's whole point."""
+        reg = MetricsRegistry()
+        c = reg.counter("ops")
+        n_threads, per_thread = 8, 5000
+
+        def work():
+            for _ in range(per_thread):
+                c.inc()
+
+        threads = [threading.Thread(target=work) for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert c.value() == n_threads * per_thread
+
+    def test_same_key_same_instrument(self):
+        reg = MetricsRegistry()
+        assert reg.counter("x", tier="hdd") is reg.counter("x", tier="hdd")
+        assert reg.counter("x", tier="hdd") is not reg.counter("x", tier="ssd")
+
+
+class TestGauge:
+    def test_set_and_add(self):
+        reg = MetricsRegistry()
+        g = reg.gauge("backlog")
+        g.set(10)
+        g.add(-3)
+        assert g.value() == 7
+
+    def test_function_gauge_polled_at_collect(self):
+        reg = MetricsRegistry()
+        state = {"v": 1}
+        reg.register_gauge("depth", lambda: state["v"])
+        assert reg.collect()["gauges"]["depth"] == 1
+        state["v"] = 42
+        assert reg.collect()["gauges"]["depth"] == 42
+
+    def test_dead_provider_does_not_poison_collect(self):
+        reg = MetricsRegistry()
+        reg.register_gauge("bad", lambda: 1 / 0)
+        reg.gauge("good").set(5)
+        snap = reg.collect()
+        assert "bad" not in snap["gauges"]
+        assert snap["gauges"]["good"] == 5
+
+
+# ---------------------------------------------------------------------------
+# streaming histogram sketch
+# ---------------------------------------------------------------------------
+def true_quantile(xs, q):
+    """Same rank semantics as hist_quantile: nearest lower rank."""
+    import math
+
+    s = sorted(xs)
+    rank = max(0, math.ceil(q / 100.0 * len(s)) - 1)
+    return s[rank]
+
+
+class TestHistogram:
+    def test_quantiles_within_alpha(self):
+        reg = MetricsRegistry(alpha=0.05)
+        h = reg.histogram("lat")
+        xs = [0.001 * (i % 97 + 1) ** 2 for i in range(5000)]
+        for v in xs:
+            h.observe(v)
+        for q in (50.0, 95.0, 99.0):
+            est, true = h.quantile(q), true_quantile(xs, q)
+            assert abs(est - true) / true <= 0.05 + 1e-9, (q, est, true)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.floats(1e-4, 1e4), min_size=1, max_size=100))
+    def test_quantile_property(self, xs):
+        h = MetricsRegistry(alpha=0.05).histogram("h")
+        for v in xs:
+            h.observe(v)
+        for q in (0.0, 50.0, 95.0, 100.0):
+            est, true = h.quantile(q), true_quantile(xs, q)
+            assert abs(est - true) / true <= 0.05 + 1e-9
+
+    def test_zero_and_negative_values(self):
+        h = MetricsRegistry().histogram("h")
+        for v in (-1.0, 0.0, 5.0):
+            h.observe(v)
+        snap = h.snapshot()
+        assert snap["zero"] == 2
+        assert snap["count"] == 3
+        assert h.quantile(0.0) <= 0.0
+        assert h.quantile(100.0) == pytest.approx(5.0, rel=0.05)
+
+    def test_concurrent_observes_merge_exactly(self):
+        """Thread shards must merge to the exact count/sum, quantiles
+        within sketch error of the pooled sample."""
+        h = MetricsRegistry(alpha=0.05).histogram("h")
+        n_threads, per_thread = 6, 2000
+
+        def work(k):
+            for i in range(per_thread):
+                h.observe(0.001 + ((k * per_thread + i) % 100) * 0.01)
+
+        threads = [threading.Thread(target=work, args=(k,))
+                   for k in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        xs = [0.001 + (j % 100) * 0.01 for j in range(n_threads * per_thread)]
+        snap = h.snapshot()
+        assert snap["count"] == len(xs)
+        assert snap["sum"] == pytest.approx(sum(xs), rel=1e-6)
+        for q in (50.0, 95.0, 99.0):
+            est, true = h.quantile(q), true_quantile(xs, q)
+            assert abs(est - true) / true <= 0.05 + 1e-9
+
+    def test_merge_snapshots_equals_single_sketch(self):
+        reg = MetricsRegistry(alpha=0.05)
+        a, b, all_ = (reg.histogram(n) for n in ("a", "b", "all"))
+        xs = [0.01 * (i + 1) for i in range(200)]
+        for v in xs[:100]:
+            a.observe(v)
+            all_.observe(v)
+        for v in xs[100:]:
+            b.observe(v)
+            all_.observe(v)
+        merged = metrics.merge_hist_snapshots(a.snapshot(), b.snapshot())
+        assert merged["buckets"] == all_.snapshot()["buckets"]
+        assert merged["count"] == 200
+        for q in (50.0, 99.0):
+            assert metrics.hist_quantile(merged, q) == all_.quantile(q)
+
+    def test_merge_gamma_mismatch_rejected(self):
+        reg = MetricsRegistry()
+        a = reg.histogram("a", alpha=0.05)
+        b = reg.histogram("b", alpha=0.01)
+        a.observe(1.0)
+        b.observe(1.0)
+        with pytest.raises(ValueError):
+            metrics.merge_hist_snapshots(a.snapshot(), b.snapshot())
+
+    def test_quantile_accepts_stringified_bucket_keys(self):
+        h = MetricsRegistry().histogram("h")
+        for v in (1.0, 2.0, 3.0):
+            h.observe(v)
+        snap = h.snapshot()
+        snap["buckets"] = {str(k): v for k, v in snap["buckets"].items()}
+        assert metrics.hist_quantile(snap, 50.0) == h.quantile(50.0)
+
+
+# ---------------------------------------------------------------------------
+# module-level API: enable/disable discipline
+# ---------------------------------------------------------------------------
+class TestModuleAPI:
+    def test_disabled_hooks_are_noops(self):
+        assert not metrics.enabled()
+        metrics.inc("c")
+        metrics.observe("h", 1.0)
+        metrics.set_gauge("g", 1.0)
+        metrics.add_gauge("g", 1.0)
+        assert metrics.timer("t") is metrics.NULL_METRIC
+        assert metrics.get_registry() is None
+
+    def test_start_enables_and_stop_disables(self):
+        reg = metrics.start()
+        assert metrics.enabled()
+        metrics.inc("c", 3)
+        with metrics.timer("t"):
+            pass
+        snap = reg.collect()
+        assert snap["counters"]["c"] == 3
+        assert snap["histograms"]["t"]["count"] == 1
+        assert metrics.stop() is reg
+        assert not metrics.enabled()
+
+    def test_start_enabled_false(self):
+        metrics.start(enabled=False)
+        metrics.inc("c")
+        assert metrics.get_registry().collect()["counters"] == {}
+
+    def test_persistent_gauge_provider_reattaches(self):
+        """Providers registered while no registry exists (the process-global
+        ReaderPool predates metrics.start()) attach to every new registry."""
+        metrics.register_gauge("pool.depth", lambda: 7, pool="p0")
+        try:
+            reg = metrics.start()
+            assert reg.collect()["gauges"]['pool.depth{pool="p0"}'] == 7
+            metrics.stop()
+            reg2 = metrics.start()
+            assert reg2.collect()["gauges"]['pool.depth{pool="p0"}'] == 7
+            metrics.unregister_gauge("pool.depth", pool="p0")
+            assert 'pool.depth{pool="p0"}' not in reg2.collect()["gauges"]
+        finally:
+            metrics.unregister_gauge("pool.depth", pool="p0")
+
+    def test_disabled_path_allocates_nothing(self):
+        """10k disabled-path hook calls must not allocate meaningfully —
+        the same bar as the tracer's NULL_SPAN fast path."""
+        metrics.stop()
+        for _ in range(100):  # warm up any lazy internals
+            metrics.inc("c")
+            with metrics.timer("t"):
+                pass
+        tracemalloc.start()
+        for _ in range(10_000):
+            metrics.inc("c", 2)
+            metrics.observe("h", 0.5)
+            metrics.set_gauge("g", 1.0)
+            with metrics.timer("t"):
+                pass
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        assert peak < 16_384, f"disabled metrics path allocated {peak} bytes"
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+class TestPrometheusExport:
+    def _populated(self):
+        reg = metrics.start()
+        metrics.inc("storage.read_ops", 3, tier="hdd")
+        metrics.inc("storage.read_ops", 1, tier="ssd")
+        metrics.set_gauge("prefetch.occupancy", 2, it="0")
+        for v in (0.001, 0.002, 0.004, 0.008):
+            metrics.observe("storage.read_s", v, tier="hdd")
+        return reg
+
+    def test_counters_gauges_roundtrip(self):
+        reg = self._populated()
+        snap = reg.collect()
+        parsed = metrics.from_prometheus_text(metrics.to_prometheus_text(reg))
+        for rendered, v in snap["counters"].items():
+            name, labels = metrics.parse_name(rendered)
+            key = metrics.render_name(_sanitize(name), labels)
+            assert parsed["counters"][key] == v
+        for rendered, v in snap["gauges"].items():
+            name, labels = metrics.parse_name(rendered)
+            key = metrics.render_name(_sanitize(name), labels)
+            assert parsed["gauges"][key] == v
+
+    def test_histogram_le_form(self):
+        reg = self._populated()
+        snap = reg.collect()
+        parsed = metrics.from_prometheus_text(metrics.to_prometheus_text(reg))
+        h = parsed["histograms_le"]['storage_read_s{tier="hdd"}']
+        hsnap = snap["histograms"]['storage.read_s{tier="hdd"}']
+        assert h["count"] == hsnap["count"] == 4
+        assert h["sum"] == pytest.approx(hsnap["sum"])
+        # cumulative counts must be nondecreasing and end at count
+        cums = [c for _, c in h["buckets"]]
+        assert cums == sorted(cums)
+        assert cums[-1] == h["count"]
+        # le bounds match the sketch geometry: gamma ** idx
+        les = [le for le, _ in h["buckets"]]
+        assert les == sorted(les)
+
+    def test_text_render_is_canonical(self):
+        reg = self._populated()
+        text = metrics.to_prometheus_text(reg)
+        assert text == metrics.to_prometheus_text(reg.collect())
+        assert "# TYPE storage_read_ops counter" in text
+        # one TYPE line per family even with several labeled series
+        assert text.count("# TYPE storage_read_ops counter") == 1
+
+
+class TestJsonlExport:
+    def test_snapshot_roundtrip_lossless(self):
+        reg = metrics.start()
+        for v in (0.001, 0.05, 0.4, 2.0):
+            metrics.observe("lat", v)
+        metrics.inc("ops", 9)
+        snap = reg.collect()
+        back = metrics.snapshot_from_json(metrics.snapshot_to_json(snap))
+        assert back["counters"] == snap["counters"]
+        assert back["histograms"]["lat"]["buckets"] == \
+            snap["histograms"]["lat"]["buckets"]
+        for q in (50.0, 95.0, 99.0):
+            assert metrics.hist_quantile(back["histograms"]["lat"], q) == \
+                metrics.hist_quantile(snap["histograms"]["lat"], q)
+
+    def test_dump_load_jsonl(self, tmp_path):
+        reg = metrics.start()
+        metrics.inc("ops")
+        snaps = [reg.collect(), reg.collect()]
+        p = str(tmp_path / "series.jsonl")
+        metrics.dump_jsonl(snaps, p)
+        back = metrics.load_jsonl(p)
+        assert len(back) == 2
+        assert back[0]["counters"] == snaps[0]["counters"]
+
+    def test_series_markdown_renders(self):
+        reg = metrics.start()
+        metrics.set_gauge("occ", 3)
+        metrics.inc("ops", 5)
+        metrics.observe("lat", 0.01)
+        lines = metrics.series_markdown([reg.collect(), reg.collect()])
+        text = "\n".join(lines)
+        assert "`occ`" in text and "`ops`" in text and "`lat`" in text
+
+
+# ---------------------------------------------------------------------------
+# sampler
+# ---------------------------------------------------------------------------
+class TestSampler:
+    def test_collects_series_and_jsonl(self, tmp_path):
+        reg = metrics.start()
+        p = str(tmp_path / "m.jsonl")
+        sampler = metrics.Sampler(interval_s=0.02, jsonl_path=p)
+        sampler.start()
+        for i in range(5):
+            metrics.inc("ticks")
+            time.sleep(0.02)
+        sampler.stop()
+        pts = sampler.points()
+        assert len(pts) >= 1
+        assert pts[-1]["counters"]["ticks"] == 5
+        loaded = metrics.load_jsonl(p)
+        assert len(loaded) == len(pts)
+        assert loaded[-1]["counters"]["ticks"] == 5
+        # timestamps monotone nondecreasing
+        ts = [s["t"] for s in pts]
+        assert ts == sorted(ts)
+
+    def test_short_run_still_lands_a_point(self):
+        metrics.start()
+        sampler = metrics.Sampler(interval_s=60.0)
+        sampler.start()
+        metrics.inc("c")
+        sampler.stop()
+        assert len(sampler.points()) == 1
+
+    def test_no_registry_no_points(self):
+        sampler = metrics.Sampler(interval_s=0.01)
+        sampler.start()
+        time.sleep(0.05)
+        sampler.stop()
+        assert sampler.points() == []
+
+    def test_invalid_interval(self):
+        with pytest.raises(ValueError):
+            metrics.Sampler(interval_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# stall detection
+# ---------------------------------------------------------------------------
+class TestStallDetector:
+    def test_trips_on_injected_slow_step_and_dumps_snapshot(self, tmp_path):
+        metrics.start()
+        metrics.inc("pipeline.records", 100)
+        det = metrics.StallDetector(window=16, quantile=95.0, factor=3.0,
+                                    min_samples=4,
+                                    snapshot_dir=str(tmp_path))
+        for i in range(8):
+            assert det.observe(i, 0.010) is None
+        ev = det.observe(8, 0.200)  # 20x baseline: must trip
+        assert ev is not None
+        assert ev.step == 8
+        assert ev.duration_s == pytest.approx(0.200)
+        assert ev.threshold_s == pytest.approx(0.030, rel=0.01)
+        # the snapshot carries the live registry state
+        assert ev.snapshot["metrics"]["counters"]["pipeline.records"] == 100
+        dump = tmp_path / "stall_step8.json"
+        assert dump.exists()
+        data = json.loads(dump.read_text())
+        assert data["step"] == 8
+        assert data["snapshot"]["metrics"]["counters"][
+            "pipeline.records"] == 100
+
+    def test_tripped_step_excluded_from_baseline(self):
+        det = metrics.StallDetector(window=16, factor=3.0, min_samples=4)
+        for i in range(8):
+            det.observe(i, 0.010)
+        assert det.observe(8, 1.0) is not None     # stall
+        assert det.observe(9, 0.010) is None        # normal step still normal
+        assert det.observe(10, 1.0) is not None     # baseline not inflated
+        assert det.summary()["stalls"] == 2
+        assert det.summary()["steps"] == [8, 10]
+
+    def test_no_trip_before_min_samples(self):
+        det = metrics.StallDetector(min_samples=8)
+        for i in range(7):
+            assert det.observe(i, 10.0 if i == 5 else 0.01) is None
+
+    def test_on_stall_callback(self):
+        seen = []
+        det = metrics.StallDetector(min_samples=2, window=4,
+                                    on_stall=seen.append)
+        det.observe(0, 0.01)
+        det.observe(1, 0.01)
+        det.observe(2, 5.0)
+        assert [e.step for e in seen] == [2]
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            metrics.StallDetector(window=1)
+        with pytest.raises(ValueError):
+            metrics.StallDetector(factor=1.0)
+
+
+# ---------------------------------------------------------------------------
+# subsystem integration: the wired-through producers
+# ---------------------------------------------------------------------------
+class TestInstrumentation:
+    def test_storage_per_tier_counters_and_latency(self, tmp_path):
+        from repro.core.storage import NativeStorage
+
+        metrics.start()
+        st = NativeStorage(str(tmp_path))
+        st.write_file("a.bin", b"x" * 1000)
+        st.read_file("a.bin")
+        st.read_range("a.bin", 0, 100)
+        snap = metrics.get_registry().collect()
+        assert snap["counters"]['storage.read_ops{tier="native"}'] == 2
+        assert snap["counters"]['storage.read_bytes{tier="native"}'] == 1100
+        assert snap["counters"]['storage.write_bytes{tier="native"}'] == 1000
+        assert snap["histograms"]['storage.read_s{tier="native"}'][
+            "count"] == 2
+
+    def test_fault_injection_counter(self, tmp_path):
+        from repro.core.faults import FaultInjected, FaultyStorage
+        from repro.core.storage import NativeStorage
+
+        metrics.start()
+        faulty = FaultyStorage(NativeStorage(str(tmp_path)))
+        faulty.fail_after(0)
+        with pytest.raises(FaultInjected):
+            faulty.write_file("x.bin", b"data")
+        snap = metrics.get_registry().collect()
+        assert snap["counters"][
+            'storage.faults_injected{op="write_file"}'] == 1
+
+    def test_prefetcher_occupancy_and_counters(self):
+        from repro.core.prefetcher import PrefetchIterator
+
+        metrics.start()
+        it = PrefetchIterator(iter(range(20)), buffer_size=4)
+        assert list(it) == list(range(20))
+        it.close(timeout=5.0)
+        snap = metrics.get_registry().collect()
+        produced = [v for k, v in snap["counters"].items()
+                    if k.startswith("prefetch.produced")]
+        consumed = [v for k, v in snap["counters"].items()
+                    if k.startswith("prefetch.consumed")]
+        assert sum(produced) == 20
+        assert sum(consumed) == 20
+        waits = [h for k, h in snap["histograms"].items()
+                 if k.startswith("prefetch.consumer_wait_s")]
+        assert waits and waits[0]["count"] == 20
+
+    def test_readerpool_gauges_lifecycle(self):
+        from repro.core.readerpool import ReaderPool
+
+        metrics.start()
+        pool = ReaderPool(name="testpool")
+        pool.ensure(2)
+        futs = [pool.submit(lambda x=i: x * 2) for i in range(10)]
+        assert sorted(f.result() for f in futs) == [i * 2 for i in range(10)]
+        snap = metrics.get_registry().collect()
+        size = [v for k, v in snap["gauges"].items()
+                if k.startswith("readerpool.size")
+                and "testpool" in k]
+        assert size == [2]
+        assert snap["counters"]["readerpool.submitted"] == 10
+        pool.shutdown()
+        snap = metrics.get_registry().collect()
+        assert not any(k.startswith("readerpool.size") and "testpool" in k
+                       for k in snap["gauges"])
+
+    def test_pipeline_records_and_drops(self, tmp_storage):
+        from repro.core import records
+        from repro.core.dataset import Dataset
+
+        metrics.start()
+        paths, labels = records.write_image_dataset(
+            tmp_storage, 8, mean_hw=(8, 8))
+        n_ok = 0
+        calls = {"n": 0}
+
+        def decode(p):
+            calls["n"] += 1
+            if calls["n"] % 4 == 0:
+                raise ValueError("corrupt")
+            return p
+
+        ds = Dataset.from_tensor_slices(paths).map(decode).ignore_errors()
+        n_ok = sum(1 for _ in ds)
+        snap = metrics.get_registry().collect()
+        assert snap["counters"]["pipeline.records"] == n_ok
+        assert snap["counters"]["pipeline.dropped"] == 8 - n_ok
+        # the latency timer covers every decode attempt, failures included
+        assert snap["histograms"]["pipeline.decode_s"]["count"] == 8
+
+
+class TestTraceReportAttachment:
+    def test_overlap_line_omitted_without_compute_busy_time(self):
+        """Read-only runs (fig5) and zero-duration compute spans must not
+        print a misleading 0.00% overlap line."""
+        from repro import trace
+        from repro.trace.tracer import SpanRecord
+
+        def mkspan(stage, t0, dur):
+            return SpanRecord(stage=stage, name="", tid=1, thread="t1",
+                              t0=t0, dur=dur, nbytes=0)
+
+        read_only = [mkspan(trace.STAGE_STORAGE_READ, 0.0, 1.0)]
+        assert "overlap" not in trace.to_markdown(read_only)
+        zero_compute = read_only + [mkspan(trace.STAGE_COMPUTE, 1.0, 0.0)]
+        assert "overlap" not in trace.to_markdown(zero_compute)
+        assert trace.overlap_ratio(zero_compute) == 0.0
+        real = read_only + [mkspan(trace.STAGE_COMPUTE, 0.5, 1.0)]
+        assert "overlap" in trace.to_markdown(real)
+
+    def test_metrics_series_attaches_to_markdown(self):
+        from repro import trace
+        from repro.trace.tracer import SpanRecord
+
+        metrics.start()
+        metrics.set_gauge("prefetch.occupancy", 3)
+        metrics.inc("pipeline.records", 12)
+        series = [metrics.get_registry().collect()]
+        spans = [SpanRecord(stage=trace.STAGE_STORAGE_READ, name="", tid=1,
+                            thread="t1", t0=0.0, dur=0.5, nbytes=100)]
+        md = trace.to_markdown(spans, metrics_series=series)
+        assert "## Metrics timeline" in md
+        assert "prefetch.occupancy" in md
+        assert "pipeline.records" in md
+
+
+class TestTrainerHeartbeat:
+    def _run_trainer(self, stall_detector=None, slow_at=None):
+        import numpy as np
+
+        from repro.train.trainer import Trainer
+
+        def train_step(state, batch):
+            if slow_at is not None and int(state["step"]) == slow_at:
+                time.sleep(0.25)
+            else:
+                time.sleep(0.002)
+            return ({"step": state["step"] + 1},
+                    {"loss": np.float32(0.0)})
+
+        tr = Trainer(train_step, {"step": np.int32(0)},
+                     iter([(i,) for i in range(40)]),
+                     stall_detector=stall_detector)
+        tr.run(30)
+        return tr
+
+    def test_per_step_heartbeat_metrics(self):
+        metrics.start()
+        self._run_trainer()
+        snap = metrics.get_registry().collect()
+        assert snap["counters"]["trainer.steps"] == 30
+        assert snap["histograms"]["trainer.compute_s"]["count"] == 30
+        assert snap["histograms"]["trainer.data_wait_s"]["count"] == 30
+        assert snap["gauges"]["trainer.last_step"] == 30
+        assert snap["gauges"]["trainer.step_s"] > 0
+
+    def test_stall_detector_trips_in_trainer(self, tmp_path):
+        metrics.start()
+        det = metrics.StallDetector(window=32, min_samples=8, factor=3.0,
+                                    snapshot_dir=str(tmp_path))
+        tr = self._run_trainer(stall_detector=det, slow_at=20)
+        assert det.summary()["stalls"] == 1
+        (ev,) = det.events
+        assert ev.duration_s > ev.threshold_s
+        assert ev.snapshot["metrics"]["counters"]["trainer.steps"] >= 8
+        assert list(tmp_path.glob("stall_step*.json"))
+        assert tr.report()["stalls"]["stalls"] == 1

@@ -1,0 +1,175 @@
+"""benchmarks/regression_gate.py: flattening, comparison rules, CLI exit
+codes against the committed baselines."""
+import copy
+import json
+import os
+import pathlib
+import shutil
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))
+
+from benchmarks import regression_gate as rg  # noqa: E402
+
+
+def payload(samples=100.0, speedup=2.0):
+    return {
+        "benchmark": "fake",
+        "config": {"n_images": 32, "thread_counts": [1, 2]},
+        "tiers": {
+            "hdd": {
+                "1": {"samples_per_s": samples, "bytes_per_s": samples * 50,
+                      "speedup": 1.0},
+                "2": {"samples_per_s": samples * speedup,
+                      "bytes_per_s": samples * speedup * 50,
+                      "speedup": speedup},
+            }
+        },
+        "bandwidth_monotone": {"hdd": True},
+    }
+
+
+class TestFlatten:
+    def test_numeric_leaves_only(self):
+        flat = rg.flatten(payload())
+        assert flat["tiers.hdd.2.samples_per_s"] == 200.0
+        assert flat["config.n_images"] == 32.0
+        # booleans and strings are not numeric leaves
+        assert "bandwidth_monotone.hdd" not in flat
+        assert "benchmark" not in flat
+
+    def test_gated_leaves_filters_to_throughput(self):
+        gated = rg.gated_leaves(payload())
+        assert set(gated) == {
+            "tiers.hdd.1.samples_per_s", "tiers.hdd.1.bytes_per_s",
+            "tiers.hdd.1.speedup",
+            "tiers.hdd.2.samples_per_s", "tiers.hdd.2.bytes_per_s",
+            "tiers.hdd.2.speedup",
+        }
+        # config ints (n_images etc.) are never gated
+        assert not any(p.startswith("config.") for p in gated)
+
+
+class TestCompare:
+    def test_identical_passes(self):
+        regs, _ = rg.compare(payload(), payload(), tolerance=0.25)
+        assert regs == []
+
+    def test_improvement_passes(self):
+        regs, _ = rg.compare(payload(100), payload(150), tolerance=0.25)
+        assert regs == []
+
+    def test_within_tolerance_passes(self):
+        regs, _ = rg.compare(payload(100), payload(80), tolerance=0.25)
+        assert regs == []
+
+    def test_regression_beyond_tolerance_fails(self):
+        regs, _ = rg.compare(payload(100), payload(50), tolerance=0.25)
+        assert regs
+        assert any("samples_per_s" in r for r in regs)
+
+    def test_config_change_skips_with_note(self):
+        new = payload(10)  # massive regression, but...
+        new["config"]["n_images"] = 64  # ...the sweep shape changed
+        regs, notes = rg.compare(payload(100), new, tolerance=0.25)
+        assert regs == []
+        assert any("config changed" in n for n in notes)
+
+    def test_disappeared_leaf_fails(self):
+        new = payload()
+        del new["tiers"]["hdd"]["2"]
+        regs, _ = rg.compare(payload(), new, tolerance=0.25)
+        assert any("disappeared" in r for r in regs)
+
+
+class TestCli:
+    """End-to-end through main() with a temp reports dir."""
+
+    @pytest.fixture()
+    def dirs(self, tmp_path, monkeypatch):
+        baselines = tmp_path / "baselines"
+        reports = tmp_path / "reports"
+        baselines.mkdir()
+        reports.mkdir()
+        monkeypatch.setattr(rg, "BASELINE_DIR", str(baselines))
+        return baselines, reports
+
+    def _write(self, d, name, data):
+        with open(os.path.join(str(d), name), "w") as f:
+            json.dump(data, f)
+
+    def test_pass_and_degraded_fail(self, dirs):
+        baselines, reports = dirs
+        self._write(baselines, "BENCH_fake.json", payload())
+        self._write(reports, "BENCH_fake.json", payload())
+        assert rg.main(["--reports-dir", str(reports)]) == 0
+        # synthetically degrade throughput far beyond tolerance
+        self._write(reports, "BENCH_fake.json", payload(samples=10))
+        assert rg.main(["--reports-dir", str(reports)]) != 0
+
+    def test_missing_report(self, dirs):
+        baselines, reports = dirs
+        self._write(baselines, "BENCH_fake.json", payload())
+        assert rg.main(["--reports-dir", str(reports)]) != 0
+        assert rg.main(["--reports-dir", str(reports),
+                        "--allow-missing"]) == 0
+
+    def test_no_baselines_fails(self, dirs):
+        baselines, reports = dirs
+        assert rg.main(["--reports-dir", str(reports)]) != 0
+
+    def test_update_seeds_baselines(self, dirs):
+        baselines, reports = dirs
+        self._write(reports, "BENCH_fake.json", payload())
+        assert rg.main(["--update", "--reports-dir", str(reports)]) == 0
+        assert (baselines / "BENCH_fake.json").exists()
+        assert rg.main(["--reports-dir", str(reports)]) == 0
+
+    def test_tolerance_flag(self, dirs):
+        baselines, reports = dirs
+        self._write(baselines, "BENCH_fake.json", payload(100))
+        self._write(reports, "BENCH_fake.json", payload(80))
+        assert rg.main(["--reports-dir", str(reports),
+                        "--tolerance", "0.1"]) != 0
+        assert rg.main(["--reports-dir", str(reports),
+                        "--tolerance", "0.3"]) == 0
+
+
+@pytest.mark.skipif(
+    not os.path.isdir(os.path.join(str(ROOT), "benchmarks", "baselines")),
+    reason="no committed baselines")
+class TestCommittedBaselines:
+    """The committed baselines must gate: identical reports pass, a
+    synthetically degraded BENCH json exits nonzero (issue acceptance)."""
+
+    def test_identity_passes_and_degraded_fails(self, tmp_path):
+        src = os.path.join(str(ROOT), "benchmarks", "baselines")
+        reports = tmp_path / "reports"
+        reports.mkdir()
+        for f in os.listdir(src):
+            shutil.copyfile(os.path.join(src, f), str(reports / f))
+        assert rg.main(["--smoke", "--reports-dir", str(reports)]) == 0
+
+        # degrade every gated leaf of one report by 10x
+        victim = sorted(os.listdir(src))[0]
+        with open(str(reports / victim)) as f:
+            data = json.load(f)
+
+        def degrade(obj):
+            if isinstance(obj, dict):
+                for k, v in obj.items():
+                    if k in rg.GATED_LEAVES and isinstance(v, (int, float)):
+                        obj[k] = v / 10.0
+                    else:
+                        degrade(v)
+
+        degraded = copy.deepcopy(data)
+        degrade(degraded["tiers" if "tiers" in degraded else "pipelines"])
+        if "speedup_sharded_vs_legacy" in degraded:
+            degraded["speedup_sharded_vs_legacy"] /= 10.0
+        with open(str(reports / victim), "w") as f:
+            json.dump(degraded, f)
+        assert rg.main(["--smoke", "--reports-dir", str(reports)]) != 0
