@@ -17,7 +17,11 @@
   training blocks for the host snapshot only; a background writer does the
   sharded save; ``save()`` returns a future-like handle.
 * :mod:`repro.core.burst_buffer` — fast-tier staging + multi-stream async
-  drain (the 2.6x).
+  drain (the 2.6x), with intra-file parallel range drains
+  (``Storage.write_range``).
+* :mod:`repro.core.async_burst_buffer` — the fused engine: snapshot-only
+  blocking, background fast-tier stage, then the multi-stream drain —
+  training never blocks past the host snapshot.
 * :mod:`repro.core.faults` — :class:`FaultyStorage` fault injection, the
   crash-consistency proof harness for all of the above.
 * :mod:`repro.core.microbench` — STREAM-like ingestion benchmark.
@@ -38,6 +42,7 @@ from .readerpool import ReaderPool, reader_pool
 from .storage import Storage, NativeStorage, SimulatedStorage, TIERS, make_storage
 from .checkpoint import CheckpointSaver
 from .async_checkpoint import AsyncCheckpointer, AsyncSaveHandle
+from .async_burst_buffer import AsyncBurstBufferCheckpointer
 from .burst_buffer import BurstBufferCheckpointer, DirectCheckpointer
 from .faults import FaultInjected, FaultyStorage
 from .stats import IOTracer, StepTimer
@@ -47,6 +52,7 @@ __all__ = [
     "PrefetchIterator", "prefetch_to_device", "ReaderPool", "reader_pool",
     "Storage", "NativeStorage", "SimulatedStorage", "TIERS", "make_storage",
     "CheckpointSaver", "AsyncCheckpointer", "AsyncSaveHandle",
+    "AsyncBurstBufferCheckpointer",
     "BurstBufferCheckpointer", "DirectCheckpointer",
     "FaultInjected", "FaultyStorage",
     "IOTracer", "StepTimer",

@@ -43,26 +43,74 @@ from .checkpoint import CheckpointSaver, SaveResult, flatten_pytree
 
 
 class AsyncSaveHandle:
-    """Future-like handle for one in-flight checkpoint save."""
+    """Future-like handle for one in-flight checkpoint save.
+
+    Error bookkeeping distinguishes two degrees of "the caller knows":
+
+    * *observed* — the caller saw the error through :meth:`result` or
+      :meth:`exception`.  ``close()`` then stays quiet, but a draining
+      ``wait()`` still raises it (wait's contract: surface every failed
+      save it drains, exactly once).
+    * *reported* — ``wait()``/``close()`` raised it.  Nothing re-raises it
+      afterwards.
+
+    So one failure is raised by at most one drain call and never silently
+    dropped: an error nobody observed is re-raised by ``close()``.
+    """
 
     def __init__(self, step: int, future, snapshot_s: float):
         self.step = step
         self.snapshot_s = snapshot_s
         self._future = future
+        self._observed = False   # seen via result()/exception()
+        self._reported = False   # raised by wait()/close()
 
     def done(self) -> bool:
         return self._future.done()
 
     def result(self, timeout: Optional[float] = None) -> SaveResult:
         """Block until the background write commits; re-raises its error."""
-        return self._future.result(timeout)
+        try:
+            return self._future.result(timeout)
+        except BaseException:
+            self._observed = True
+            raise
 
     def exception(self, timeout: Optional[float] = None):
-        return self._future.exception(timeout)
+        e = self._future.exception(timeout)
+        if e is not None:
+            self._observed = True
+        return e
+
+    def _unreported_error(self):
+        """Settled-with-error and never seen by anyone (no blocking, no
+        marking) — what ``close()`` must surface."""
+        if not self._future.done() or self._reported or self._observed:
+            return None
+        return self._future.exception()
+
+    def _drain_error(self):
+        """Blocking: the error ``wait()`` owes the caller (not yet raised
+        by a drain call), marking it reported."""
+        e = self._future.exception()
+        if e is None or self._reported:
+            return None
+        self._reported = True
+        return e
 
     def __repr__(self) -> str:  # pragma: no cover
         state = "done" if self.done() else "pending"
         return f"AsyncSaveHandle(step={self.step}, {state})"
+
+
+def _any_error_delivered(handles) -> bool:
+    """True if some failed save in ``handles`` was already seen by the
+    caller (observed via the handle, or raised by a drain call)."""
+    return any(
+        (h._observed or h._reported)
+        and h._future.done() and h._future.exception() is not None
+        for h in handles
+    )
 
 
 class AsyncCheckpointer:
@@ -119,7 +167,7 @@ class AsyncCheckpointer:
                 metrics.observe("ckpt.snapshot_s",
                                 time.monotonic() - t_snap, ckpt=self.prefix)
             fut = self._executor.submit(self._write, step, flat, extra_meta,
-                                        treedef)
+                                        treedef, m)
             if m:
                 metrics.add_gauge("ckpt.pending_saves", 1, ckpt=self.prefix)
         except BaseException:
@@ -130,15 +178,19 @@ class AsyncCheckpointer:
         if m:
             metrics.observe("ckpt.blocked_s", blocked, ckpt=self.prefix)
         handle = AsyncSaveHandle(step, fut, blocked)
-        # keep only unsettled and failed-but-unreported handles: the list
-        # must not grow with run length
-        self._handles = [h for h in self._handles
-                         if not h.done() or h.exception() is not None]
+        # keep only unsettled and failed-but-not-yet-drain-reported handles:
+        # the list must not grow with run length
+        self._handles = [
+            h for h in self._handles
+            if not h.done()
+            or (not h._reported and h._future.exception() is not None)
+        ]
         self._handles.append(handle)
         return handle
 
     # -- writer thread -------------------------------------------------------
-    def _write(self, step: int, flat, extra_meta, treedef) -> SaveResult:
+    def _write(self, step: int, flat, extra_meta, treedef,
+               m: bool) -> SaveResult:
         t0 = time.monotonic()
         try:
             res = self.saver.save_flat(step, flat, extra_meta, treedef=treedef)
@@ -149,7 +201,9 @@ class AsyncCheckpointer:
             return res
         finally:
             self._sema.release()
-            metrics.add_gauge("ckpt.pending_saves", -1, ckpt=self.prefix)
+            if m:  # symmetric with the save-time increment: the gauge must
+                   # never go negative when metrics toggles mid-run
+                metrics.add_gauge("ckpt.pending_saves", -1, ckpt=self.prefix)
 
     # -- consumer-side API ----------------------------------------------------
     def wait(self) -> None:
@@ -160,7 +214,7 @@ class AsyncCheckpointer:
         handles, self._handles = self._handles, []
         errors = []
         for h in handles:
-            e = h.exception()  # blocks until this save settles
+            e = h._drain_error()  # blocks until this save settles
             if e is not None:
                 errors.append(e)
         if errors:
@@ -170,9 +224,24 @@ class AsyncCheckpointer:
         return sum(1 for h in self._handles if not h.done())
 
     def close(self, wait: bool = True) -> None:
+        """Shut the writer down; surface (not silently drop) a background
+        error that nobody ever saw.
+
+        If any failure was already delivered (a handle's ``result()`` /
+        ``exception()``, or a ``wait()`` raise), close stays quiet: with a
+        sticky device fault every in-flight save fails the same way, and
+        re-raising the tail of that cascade at teardown helps no one.  Only
+        the never-delivered case is raised here."""
         if self._executor is not None:
             self._executor.shutdown(wait=wait)
             self._executor = None
+        handles, self._handles = self._handles, []
+        if _any_error_delivered(handles):
+            return
+        errors = [e for e in (h._unreported_error() for h in handles)
+                  if e is not None]
+        if errors:
+            raise errors[0]
 
     # -- restore / introspection (delegate to the saver) ----------------------
     def restore_pytree(self, skeleton: Any, step: Optional[int] = None) -> Any:

@@ -10,13 +10,25 @@ landed, so either tier is always restorable to a consistent step.
 ``DirectCheckpointer`` (same interface, no staging) is the paper's baseline
 of checkpointing straight to a device.
 
-The drain is **multi-stream**: the files of a step are copied on
-``drain_streams`` concurrent threads, each streaming ``drain_chunk``-byte
-chunks (``Storage.copy_to``) — the write-side analogue of the paper's read
-thread-scaling, and the same reason parallel shard *writes* help in
-:class:`repro.core.checkpoint.CheckpointSaver`.  For snapshot-async saves
-that don't block on the fast tier at all, see
-:class:`repro.core.async_checkpoint.AsyncCheckpointer`.
+The drain is **multi-stream and intra-file**: the files of a step are
+split into ``drain_chunk``-byte ranges and all ranges — across files *and
+within* one large file — stream concurrently on ``drain_streams`` threads
+(``Storage.read_range`` → ``Storage.write_range``, pwrite-style), the
+write-side analogue of the paper's read thread-scaling and the same reason
+parallel shard *writes* help in :class:`repro.core.checkpoint.
+CheckpointSaver`.  A single multi-GB shard therefore no longer serializes
+the whole drain behind one ``copy_to`` stream.
+
+The slow-tier commit marker is written durably (``sync=True``) via
+tmp+rename: the marker is the restorability commit point, so it must be an
+atomic publish *and* a write barrier that flushes the drained data before
+it — see the torn-write / reordered-fsync fault modes in
+:mod:`repro.core.faults` for the crash models this survives.
+
+For snapshot-async saves that don't block on the fast tier at all, see
+:class:`repro.core.async_checkpoint.AsyncCheckpointer`, and for the fused
+engine (snapshot-only blocking *plus* the burst-buffer drain) see
+:class:`repro.core.async_burst_buffer.AsyncBurstBufferCheckpointer`.
 """
 from __future__ import annotations
 
@@ -25,10 +37,11 @@ import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Any, List, Optional
+from typing import Any, List, Optional, Tuple
 
 from .. import metrics, trace
-from .checkpoint import CheckpointSaver, SaveResult, CHECKPOINT_MARKER
+from .checkpoint import CheckpointSaver, SaveResult, CHECKPOINT_MARKER, \
+    write_marker
 
 
 @dataclass
@@ -123,18 +136,24 @@ class BurstBufferCheckpointer:
     def save(self, step: int, tree: Any, extra_meta: Optional[dict] = None) -> SaveResult:
         r = self.fast_saver.save(step, tree, extra_meta)
         self.blocked_s.append(r.seconds)  # only the fast-tier write blocks
-        if metrics.enabled():
+        m = metrics.enabled()
+        if m:
             metrics.observe("ckpt.staged_s", r.seconds, ckpt=self.prefix)
             metrics.add_gauge("ckpt.drain_backlog_bytes", r.n_bytes,
                               ckpt=self.prefix)
+        self._enqueue_drain(step, r, m)
+        return r
+
+    def _enqueue_drain(self, step: int, r: SaveResult, m: bool) -> None:
         with self._pending_lock:
             self._pending.append(step)
-        job = (step, list(r.files), r.n_bytes, time.monotonic(), r.seconds)
+        # the job carries the save-time metrics flag so the backlog gauge is
+        # decremented iff it was incremented (metrics may toggle mid-run)
+        job = (step, list(r.files), r.n_bytes, r.seconds, m)
         if self.drain_async:
             self._q.put(job)
         else:
             self._drain_one(job)
-        return r
 
     # -- drainer -----------------------------------------------------------------
     def _drain_loop(self) -> None:
@@ -145,40 +164,67 @@ class BurstBufferCheckpointer:
                 return
             try:
                 self._drain_one(job)
-            except BaseException as e:  # surface on wait()
-                self._errors.append(e)
+            except BaseException as e:  # surface on wait()/close()
+                with self._pending_lock:
+                    self._errors.append(e)
             finally:
                 self._q.task_done()
 
     def _drain_one(self, job) -> None:
-        step, files, n_bytes, _t_start, staged_s = job
+        step, files, n_bytes, staged_s, m = job
         with trace.span(trace.STAGE_DRAIN, f"drain:{self.prefix}-{step}",
                         n_bytes):
-            self._drain_files(step, files, n_bytes, staged_s)
+            self._drain_files(step, files, n_bytes, staged_s, m)
+
+    def _range_tasks(self, files: List[str]) -> List[Tuple[str, int, int]]:
+        """Split every file of a step into ``drain_chunk``-byte ranges so
+        one large shard drains on multiple streams (intra-file parallel)."""
+        tasks: List[Tuple[str, int, int]] = []
+        for path in files:
+            size = self.fast.size(path)
+            if size == 0:
+                tasks.append((path, 0, 0))
+                continue
+            offset = 0
+            while offset < size:
+                tasks.append((path, offset, min(self.drain_chunk,
+                                                size - offset)))
+                offset += self.drain_chunk
+        return tasks
+
+    def _drain_range(self, path: str, offset: int, length: int) -> None:
+        if length == 0:
+            self.slow.write_file(path, b"", sync=False)
+            return
+        data = self.fast.read_range(path, offset, length)
+        self.slow.write_range(path, offset, data, sync=False)
 
     def _drain_files(self, step: int, files: List[str], n_bytes: int,
-                     staged_s: float) -> None:
+                     staged_s: float, m: bool = True) -> None:
         t0 = time.monotonic()
         # read from fast tier (fast read cost), write to slow tier (slow
-        # write cost) — no sync needed: data is already durable on the fast
-        # tier (paper §V-C).  Files stream chunked on drain_streams parallel
-        # copy threads; any failure aborts before the marker moves.
-        if self.drain_streams > 1 and len(files) > 1:
+        # write cost).  All chunk ranges — across files and *within* each
+        # file — stream on drain_streams parallel threads via pwrite-style
+        # write_range; any failure aborts before the marker moves.  The
+        # data writes are not individually synced: the marker write below
+        # is the durability barrier.
+        tasks = self._range_tasks(files)
+        if self.drain_streams > 1 and len(tasks) > 1:
             with ThreadPoolExecutor(
-                min(self.drain_streams, len(files)),
+                min(self.drain_streams, len(tasks)),
                 thread_name_prefix="bb-drain",
             ) as pool:
-                futs = [
-                    pool.submit(self.fast.copy_to, path, self.slow, path,
-                                self.drain_chunk)
-                    for path in files
-                ]
+                futs = [pool.submit(self._drain_range, path, off, length)
+                        for path, off, length in tasks]
                 for f in futs:
                     f.result()
         else:
-            for path in files:
-                self.fast.copy_to(path, self.slow, path, self.drain_chunk)
-        # slow-tier commit marker after all files landed
+            for path, off, length in tasks:
+                self._drain_range(path, off, length)
+        # slow-tier commit marker after all files landed — written durably
+        # (sync=True barrier) via tmp+rename: the marker is the commit
+        # point, so it must never become durable before the data it
+        # commits, and never be left half-written
         steps = self._slow_steps()
         if step not in steps:
             steps.append(step)
@@ -187,16 +233,22 @@ class BurstBufferCheckpointer:
         import json
 
         marker = json.dumps(dict(latest=step, all_steps=retained)).encode()
-        self.slow.write_file(f"{self._dir}/{CHECKPOINT_MARKER}", marker)
+        write_marker(self.slow, f"{self._dir}/{CHECKPOINT_MARKER}", marker,
+                     sync=True)
         for old in steps[:-self.keep] if len(steps) > self.keep else []:
             self._delete_slow_step(old)
+        with self._pending_lock:
+            # compact drained steps out of both structures: neither may
+            # grow with run length (they used to leak one entry per save)
+            self._drained.add(step)
+            self._pending = [s for s in self._pending
+                             if s not in self._drained]
+            self._drained.intersection_update(self._pending)
+            pending = set(self._pending)
         if self.cleanup_fast:
             # free buffer capacity (keep only the newest staged step around
             # for fast restore) — paper §V-C: "cleanup the buffer".  Never
             # evict steps still waiting in the drain queue.
-            with self._pending_lock:
-                self._drained.add(step)
-                pending = set(self._pending) - self._drained
             fast_steps = self.fast_saver.all_steps()
             keep_newest = max(fast_steps) if fast_steps else None
             for old in fast_steps:
@@ -210,6 +262,7 @@ class BurstBufferCheckpointer:
             metrics.observe("ckpt.drain_s", time.monotonic() - t0,
                             ckpt=self.prefix)
             metrics.inc("ckpt.drains", 1, ckpt=self.prefix)
+        if m:
             metrics.add_gauge("ckpt.drain_backlog_bytes", -n_bytes,
                               ckpt=self.prefix)
 
@@ -228,17 +281,31 @@ class BurstBufferCheckpointer:
                 self.slow.remove(f"{self._dir}/{name}")
 
     # -- consumer-side API ---------------------------------------------------------
+    def _take_errors(self) -> List[BaseException]:
+        with self._pending_lock:
+            errors, self._errors = self._errors, []
+        return errors
+
     def wait(self) -> None:
-        """Block until all queued drains have completed."""
+        """Block until all queued drains have completed; raise the first
+        background error.  Errors are reported **once** — a failed drain
+        does not re-raise on every later ``wait()`` (the report-once
+        contract :meth:`AsyncCheckpointer.wait` documents)."""
         self._q.join()
-        if self._errors:
-            raise self._errors[0]
+        errors = self._take_errors()
+        if errors:
+            raise errors[0]
 
     def close(self) -> None:
+        """Stop the drain thread; surface (not silently drop) any pending
+        drain error that no ``wait()`` ever reported."""
         if self._thread is not None:
             self._q.put(None)
             self._thread.join(timeout=60)
             self._thread = None
+        errors = self._take_errors()
+        if errors:
+            raise errors[0]
 
     def latest_step(self) -> Optional[int]:
         s = self.fast_saver.latest_step()
@@ -258,13 +325,14 @@ class BurstBufferCheckpointer:
         """Restore preferring the fast tier (paper: buffer holds the newest)."""
         try:
             return self.fast_saver.restore_pytree(skeleton, step)
-        except (FileNotFoundError, KeyError, OSError):
+        except (FileNotFoundError, KeyError, OSError, ValueError):
+            # ValueError covers a corrupt (torn) fast-tier marker/index
             slow_saver = CheckpointSaver(self.slow, self.prefix, keep=self.keep)
             return slow_saver.restore_pytree(skeleton, step)
 
     def restore_sharded(self, skeleton, shardings, step=None):
         try:
             return self.fast_saver.restore_sharded(skeleton, shardings, step)
-        except (FileNotFoundError, KeyError, OSError):
+        except (FileNotFoundError, KeyError, OSError, ValueError):
             slow_saver = CheckpointSaver(self.slow, self.prefix, keep=self.keep)
             return slow_saver.restore_sharded(skeleton, shardings, step)

@@ -43,6 +43,22 @@ from .. import trace
 CHECKPOINT_MARKER = "checkpoint"
 _QBLOCK = 256  # quantization block (last-dim) size
 
+
+def write_marker(storage, path: str, payload: bytes, sync: bool = True) -> None:
+    """Commit-marker write: tmp file + atomic rename.
+
+    A plain ``write_file`` truncates-then-writes, so a crash *mid-marker*
+    (a torn write — see ``repro.core.faults``) can leave a corrupt marker
+    and make **both** the old and new checkpoint unreachable.  Writing to a
+    sibling tmp and renaming keeps the old marker intact until the new one
+    exists in full; ``sync=True`` makes the tmp durable (a write barrier)
+    before the rename publishes it — the restorability commit point of the
+    whole protocol.
+    """
+    tmp = path + ".tmp"
+    storage.write_file(tmp, payload, sync=sync)
+    storage.rename(tmp, path)
+
 #: dtypes eligible for int8 blockwise quantization (by name, so the check
 #: never needs np.dtype("bfloat16") — which raises unless ml_dtypes has
 #: registered it).
@@ -328,7 +344,8 @@ class CheckpointSaver:
         steps.sort()
         retained = steps[-self.keep:]
         marker = json.dumps(dict(latest=step, all_steps=retained)).encode()
-        self.storage.write_file(self._marker_path(), marker, sync=self.sync)
+        write_marker(self.storage, self._marker_path(), marker,
+                     sync=self.sync)
         for old in steps[:-self.keep] if len(steps) > self.keep else []:
             self._delete_step(old)
 

@@ -10,6 +10,21 @@ failures at exact, reproducible points:
   :class:`FaultInjected`.  ``k=0`` fails the first op.
 * ``fail_on(substring)`` — ops whose path contains ``substring`` fail
   (e.g. arm on ``"checkpoint"`` to kill exactly the commit-marker write).
+* ``torn_write(frac, n_ops=k)`` — the tripping write is **torn**: a
+  ``frac`` prefix of its buffer really lands on the inner storage before
+  the device dies.  Clean op-boundary crashes (the two modes above) never
+  leave a half-written file; real power loss does — this mode proves the
+  commit protocol tolerates partially-landed data *and* partially-landed
+  markers (which is why markers must move by atomic rename, not rewrite).
+* ``reordered_fsync()`` — the device acknowledges writes into a volatile
+  cache and is free to persist them out of order: only a ``sync=True``
+  write (or ``fsync_dir``) is a durability **barrier** that flushes
+  everything issued before it.  :meth:`crash` then simulates power loss —
+  un-barriered writes are rolled back, except (``keep="last"``) the most
+  recently issued one, which happened to hit the medium first.  This is
+  the model under which an unsynced commit marker can become durable
+  *before* the data it commits — the classic torn protocol a clean
+  op-boundary crash can never exhibit.
 
 ``ops`` selects which operation kinds count/trip ("write" covers
 ``write_file``/``append_file``, "read" covers ``read_file``/``read_range``;
@@ -33,7 +48,7 @@ Example — prove a save killed mid-write keeps the previous step::
 from __future__ import annotations
 
 import threading
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from .. import metrics
 from .storage import Storage
@@ -43,7 +58,7 @@ class FaultInjected(OSError):
     """The error :class:`FaultyStorage` raises at its trigger point."""
 
 
-_WRITE_OPS = ("write_file", "append_file")
+_WRITE_OPS = ("write_file", "append_file", "write_range")
 _READ_OPS = ("read_file", "read_range")
 
 
@@ -57,10 +72,16 @@ class FaultyStorage(Storage):
         self._lock = threading.Lock()
         self._fail_after: Optional[int] = None
         self._fail_substring: Optional[str] = None
+        self._torn_frac: Optional[float] = None
         self._ops: Sequence[str] = _WRITE_OPS
         self._count = 0
         self._tripped = False
         self.op_log: List[tuple] = []  # (op, path, nbytes) of every attempt
+        # reordered-fsync journaling: volatile (un-barriered) writes since
+        # the last sync=True write / fsync_dir, with pre-images for rollback
+        self._journal_mode = False
+        self._journal: List[str] = []           # issue order of volatile writes
+        self._pre_state: Dict[str, Optional[bytes]] = {}  # path -> pre-image
 
     # -- arming ---------------------------------------------------------------
     def fail_after(self, n_ops: int, ops: Sequence[str] = ("write",)) -> "FaultyStorage":
@@ -80,11 +101,68 @@ class FaultyStorage(Storage):
             self._tripped = False
         return self
 
+    def torn_write(self, frac: float, n_ops: int = 0,
+                   ops: Sequence[str] = ("write",),
+                   on: Optional[str] = None) -> "FaultyStorage":
+        """Arm a torn write: after ``n_ops`` matching ops — or, with
+        ``on=substring``, at the first write whose path matches — the write
+        lands only a ``frac`` prefix of its buffer on the inner storage,
+        then the device dies (sticky clean failure afterwards)."""
+        if not 0.0 <= frac < 1.0:
+            raise ValueError(f"torn fraction must be in [0, 1), got {frac}")
+        with self._lock:
+            self._torn_frac = float(frac)
+            if on is not None:
+                self._fail_substring = on
+                self._fail_after = None
+            else:
+                self._fail_after = int(n_ops)
+            self._ops = self._expand(ops)
+            self._count = 0
+            self._tripped = False
+        return self
+
+    def reordered_fsync(self) -> "FaultyStorage":
+        """Arm the volatile-cache durability model: un-barriered writes are
+        journaled (with pre-images) and survive only until :meth:`crash`;
+        a ``sync=True`` write or ``fsync_dir`` is a barrier that makes
+        everything issued before it durable."""
+        with self._lock:
+            self._journal_mode = True
+            self._journal = []
+            self._pre_state = {}
+        return self
+
+    def crash(self, keep: str = "last") -> List[str]:
+        """Simulate power loss under ``reordered_fsync``: roll back volatile
+        writes to their pre-images.  ``keep="last"`` spares the most
+        recently issued volatile write (durability reordering: the newest
+        cache line hit the medium first — exactly the adversary an unsynced
+        commit marker loses to); ``keep="none"`` drops them all.  Returns
+        the rolled-back paths; the journal restarts (device rebooted)."""
+        with self._lock:
+            if not self._journal_mode:
+                raise RuntimeError("crash() requires reordered_fsync() armed")
+            journal, pre = self._journal, self._pre_state
+            self._journal, self._pre_state = [], {}
+        survivors = {journal[-1]} if (keep == "last" and journal) else set()
+        lost: List[str] = []
+        for path, before in pre.items():
+            if path in survivors:
+                continue
+            if before is None:
+                self.inner.remove(path)
+            else:
+                self.inner.write_file(path, before)
+            lost.append(path)
+        return lost
+
     def heal(self) -> "FaultyStorage":
         """Disarm: the device works again (tests assert recovery after)."""
         with self._lock:
             self._fail_after = None
             self._fail_substring = None
+            self._torn_frac = None
             self._count = 0
             self._tripped = False
         return self
@@ -102,17 +180,22 @@ class FaultyStorage(Storage):
         return tuple(out)
 
     # -- trigger --------------------------------------------------------------
-    def _check(self, op: str, path: str, nbytes: int = 0) -> None:
+    def _check(self, op: str, path: str, nbytes: int = 0) -> Optional[float]:
+        """Count the op; raise on a clean trip.  Returns the torn fraction
+        when the trip should land a partial buffer first (the caller does
+        the prefix write, then raises) — ``None`` means proceed normally."""
         with self._lock:
             self.op_log.append((op, path, nbytes))
             if op not in self._ops:
-                return
+                return None
             if self._tripped and self.sticky:
                 metrics.inc("storage.faults_injected", 1, op=op)
                 raise FaultInjected(f"injected fault (sticky) on {op}({path!r})")
             if self._fail_substring is not None and self._fail_substring in path:
                 self._tripped = True
                 metrics.inc("storage.faults_injected", 1, op=op)
+                if self._torn_frac is not None and op in _WRITE_OPS:
+                    return self._torn_frac
                 raise FaultInjected(
                     f"injected fault on {op}({path!r}) matching "
                     f"{self._fail_substring!r}")
@@ -120,10 +203,39 @@ class FaultyStorage(Storage):
                 if self._count >= self._fail_after:
                     self._tripped = True
                     metrics.inc("storage.faults_injected", 1, op=op)
+                    if self._torn_frac is not None and op in _WRITE_OPS:
+                        return self._torn_frac
                     raise FaultInjected(
                         f"injected fault on {op}({path!r}) after "
                         f"{self._count} ops")
                 self._count += 1
+            return None
+
+    # -- reordered-fsync journaling -------------------------------------------
+    def _pre_write(self, path: str, sync: bool) -> None:
+        """Capture the pre-image of a volatile write (before it applies)."""
+        with self._lock:
+            if not self._journal_mode or sync or path in self._pre_state:
+                return
+        # read outside the lock; a pre-image raced by another first-touch
+        # write of the same path is the same bytes either way
+        before = self.inner.read_file(path) if self.inner.exists(path) else None
+        with self._lock:
+            if self._journal_mode and path not in self._pre_state:
+                self._pre_state[path] = before
+
+    def _post_write(self, path: str, sync: bool) -> None:
+        """Journal a volatile write; a sync write is a barrier that makes
+        everything issued before it durable (syncfs semantics — the model
+        the checkpoint protocol's §III-C fsync discipline assumes)."""
+        with self._lock:
+            if not self._journal_mode:
+                return
+            if sync:
+                self._journal = []
+                self._pre_state = {}
+            else:
+                self._journal.append(path)
 
     # -- delegated I/O ---------------------------------------------------------
     def read_file(self, path: str) -> bytes:
@@ -134,16 +246,54 @@ class FaultyStorage(Storage):
         self._check("read_range", path, length)
         return self.inner.read_range(path, offset, length)
 
+    def _tear(self, op: str, path: str, n_landed: int, n_total: int) -> None:
+        raise FaultInjected(
+            f"torn {op}({path!r}): {n_landed}/{n_total} bytes landed, "
+            "then the device died")
+
     def write_file(self, path: str, data: bytes, sync: bool = False) -> None:
-        self._check("write_file", path, len(data))
+        frac = self._check("write_file", path, len(data))
+        if frac is not None:
+            n = int(len(data) * frac)
+            self._pre_write(path, False)
+            self.inner.write_file(path, bytes(data)[:n], sync=False)
+            self._post_write(path, False)
+            self._tear("write_file", path, n, len(data))
+        self._pre_write(path, sync)
         self.inner.write_file(path, data, sync=sync)
+        self._post_write(path, sync)
 
     def append_file(self, path: str, data: bytes, sync: bool = False) -> None:
-        self._check("append_file", path, len(data))
+        frac = self._check("append_file", path, len(data))
+        if frac is not None:
+            n = int(len(data) * frac)
+            self._pre_write(path, False)
+            self.inner.append_file(path, bytes(data)[:n], sync=False)
+            self._post_write(path, False)
+            self._tear("append_file", path, n, len(data))
+        self._pre_write(path, sync)
         self.inner.append_file(path, data, sync=sync)
+        self._post_write(path, sync)
+
+    def write_range(self, path: str, offset: int, data: bytes,
+                    sync: bool = False) -> None:
+        frac = self._check("write_range", path, len(data))
+        if frac is not None:
+            n = int(len(data) * frac)
+            self._pre_write(path, False)
+            self.inner.write_range(path, offset, bytes(data)[:n], sync=False)
+            self._post_write(path, False)
+            self._tear("write_range", path, n, len(data))
+        self._pre_write(path, sync)
+        self.inner.write_range(path, offset, data, sync=sync)
+        self._post_write(path, sync)
 
     def fsync_dir(self, path: str) -> None:
         self.inner.fsync_dir(path)
+        with self._lock:  # syncfs barrier: everything issued is now durable
+            if self._journal_mode:
+                self._journal = []
+                self._pre_state = {}
 
     # -- delegated namespace (never failed) ------------------------------------
     def listdir(self, path: str) -> List[str]:
@@ -159,7 +309,23 @@ class FaultyStorage(Storage):
         self.inner.remove(path)
 
     def rename(self, src: str, dst: str) -> None:
+        # rename is metadata (never failed), but renaming a *volatile* file
+        # must not launder its volatility: dst inherits it, rolling back to
+        # dst's own pre-image on crash (the old marker, for the tmp+rename
+        # commit idiom).
+        with self._lock:
+            volatile = self._journal_mode and src in self._pre_state
+        before = None
+        if volatile and self.inner.exists(dst):
+            before = self.inner.read_file(dst)
         self.inner.rename(src, dst)
+        if volatile:
+            with self._lock:
+                if self._journal_mode and src in self._pre_state:
+                    self._pre_state.pop(src)
+                    self._pre_state.setdefault(dst, before)
+                    self._journal = [dst if p == src else p
+                                     for p in self._journal]
 
     def size(self, path: str) -> int:
         return self.inner.size(path)

@@ -101,6 +101,25 @@ class Storage:
         """Append ``data`` to ``path`` (streaming writes; pays write cost)."""
         raise NotImplementedError
 
+    def write_range(self, path: str, offset: int, data: bytes,
+                    sync: bool = False) -> None:
+        """pwrite-style positional write: place ``data`` at ``offset``.
+
+        Writes past EOF extend the file (the gap reads as zeros), so
+        concurrent writers can land disjoint ranges of one file in any
+        order — this is what lets a single large checkpoint shard drain on
+        multiple streams instead of one serial ``copy_to`` chain.
+
+        The default is a read-modify-write over the whole file (correct for
+        any backend, O(file) per call); :class:`NativeStorage` and
+        :class:`SimulatedStorage` override with a real ``os.pwrite``.
+        """
+        existing = self.read_file(path) if self.exists(path) else b""
+        if len(existing) < offset:
+            existing += b"\x00" * (offset - len(existing))
+        new = existing[:offset] + bytes(data) + existing[offset + len(data):]
+        self.write_file(path, new, sync=sync)
+
     def fsync_dir(self, path: str) -> None:
         """paper §III-C: syncfs() after Saver returns."""
         raise NotImplementedError
@@ -220,6 +239,25 @@ class NativeStorage(Storage):
                 if sync:
                     f.flush()
                     os.fsync(f.fileno())
+        if m:
+            _op_metrics("write", self.name, len(data), time.monotonic() - t0)
+        if self.tracer:
+            self.tracer.record("write", len(data), path)
+
+    def write_range(self, path: str, offset: int, data: bytes,
+                    sync: bool = False) -> None:
+        m = metrics.enabled()
+        t0 = time.monotonic() if m else 0.0
+        with trace.span(trace.STAGE_STORAGE_WRITE, path, len(data)):
+            ap = self._abs(path)
+            os.makedirs(os.path.dirname(ap) or ".", exist_ok=True)
+            fd = os.open(ap, os.O_WRONLY | os.O_CREAT, 0o644)
+            try:
+                os.pwrite(fd, bytes(data), offset)
+                if sync:
+                    os.fsync(fd)
+            finally:
+                os.close(fd)
         if m:
             _op_metrics("write", self.name, len(data), time.monotonic() - t0)
         if self.tracer:
@@ -444,6 +482,28 @@ class SimulatedStorage(Storage):
                 os.makedirs(os.path.dirname(ap) or ".", exist_ok=True)
                 with open(ap, "ab") as f:
                     f.write(data)
+                self._pace(t0, n, len(data), self.spec.stream_write_bw,
+                           self._write_bucket)
+            finally:
+                self._exit()
+        if metrics.enabled():
+            _op_metrics("write", self.name, len(data), time.monotonic() - t0)
+        if self.tracer:
+            self.tracer.record("write", len(data), path)
+
+    def write_range(self, path: str, offset: int, data: bytes,
+                    sync: bool = False) -> None:
+        n = self._enter()
+        t0 = time.monotonic()
+        with trace.span(trace.STAGE_STORAGE_WRITE, path, len(data)):
+            try:
+                ap = self._abs(path)
+                os.makedirs(os.path.dirname(ap) or ".", exist_ok=True)
+                fd = os.open(ap, os.O_WRONLY | os.O_CREAT, 0o644)
+                try:
+                    os.pwrite(fd, bytes(data), offset)
+                finally:
+                    os.close(fd)
                 self._pace(t0, n, len(data), self.spec.stream_write_bw,
                            self._write_bucket)
             finally:

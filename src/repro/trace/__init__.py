@@ -55,6 +55,7 @@ from .tracer import (
     STAGE_DECODE,
     STAGE_DRAIN,
     STAGE_PREFETCH,
+    STAGE_STAGE,
     STAGE_STORAGE_READ,
     STAGE_STORAGE_WRITE,
     CounterRecord,
@@ -89,7 +90,7 @@ __all__ = [
     "STAGE_STORAGE_READ", "STAGE_STORAGE_WRITE", "STAGE_DECODE",
     "STAGE_PREFETCH", "STAGE_CKPT_SNAPSHOT", "STAGE_CKPT_WRITE",
     "STAGE_CKPT_RESTORE",
-    "STAGE_DRAIN", "STAGE_DATA_WAIT", "STAGE_COMPUTE",
+    "STAGE_DRAIN", "STAGE_STAGE", "STAGE_DATA_WAIT", "STAGE_COMPUTE",
     "INPUT_PIPELINE_STAGES",
     # reports
     "StageStats", "aggregate", "percentile", "overlap_ratio",

@@ -39,6 +39,8 @@ STAGE_CKPT_SNAPSHOT = "checkpoint_snapshot"  # pytree -> host memory (blocking)
 STAGE_CKPT_WRITE = "checkpoint_write"     # CheckpointSaver.save (serialize+write)
 STAGE_CKPT_RESTORE = "checkpoint_restore" # CheckpointSaver.restore
 STAGE_DRAIN = "bb_drain"                  # burst-buffer background drain
+STAGE_STAGE = "bb_stage"                  # async-bb fast-tier staging write
+#                                           (off the training thread)
 STAGE_DATA_WAIT = "data_wait"             # trainer blocked on next(batch)
 STAGE_COMPUTE = "compute"                 # trainer forward/backward/update
 

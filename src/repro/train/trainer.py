@@ -4,13 +4,16 @@ Integrates the paper's pieces end-to-end:
 
 * data comes through the :mod:`repro.core.dataset` pipeline (parallel map +
   prefetch) and optionally :func:`prefetch_to_device`;
-* checkpoints go through a Direct-, BurstBuffer- or Async-checkpointer every
-  ``ckpt_every`` steps (the paper's protocol: §IV-C).  With an
-  :class:`repro.core.async_checkpoint.AsyncCheckpointer`, ``save()`` returns
-  a future-like handle and the step loop never blocks past the host
-  snapshot; the trainer tracks in-flight handles, re-raises background
-  write failures at the next step boundary and at ``run()`` exit, and
-  blocks on the final preemption save so the checkpoint is durable before
+* checkpoints go through a Direct-, BurstBuffer-, Async- or
+  AsyncBurstBuffer-checkpointer every ``ckpt_every`` steps (the paper's
+  protocol: §IV-C).  With an async engine
+  (:class:`repro.core.async_checkpoint.AsyncCheckpointer` or
+  :class:`repro.core.async_burst_buffer.AsyncBurstBufferCheckpointer`),
+  ``save()`` returns a future-like handle and the step loop never blocks
+  past the host snapshot; the trainer tracks in-flight handles, re-raises
+  background write failures at the next step boundary and at ``run()``
+  exit, and blocks on the final preemption save so the checkpoint is
+  durable (fast-tier committed, for the async burst buffer) before
   stopping.  A save still in flight when ``run()`` returns stays pending —
   call :meth:`Trainer.wait_for_checkpoints` to drain it and surface any
   error (the same contract as ``BurstBufferCheckpointer.wait``);

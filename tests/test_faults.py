@@ -4,16 +4,22 @@ Every checkpointer documents "a crash mid-save leaves the previous
 checkpoint restorable" — these tests kill the storage at exact points
 (before the commit marker, on the marker itself, during the drain) with
 :class:`FaultyStorage` and assert the previous step survives on every path:
-CheckpointSaver, AsyncCheckpointer, and both tiers of
-BurstBufferCheckpointer.
+CheckpointSaver, AsyncCheckpointer, BurstBufferCheckpointer (both tiers),
+and AsyncBurstBufferCheckpointer — the latter under *every* write-op
+injection point of its save/drain path, and under the torn-write and
+reordered-fsync crash models, not just clean op-boundary kills.
 """
+import tempfile
+
 import numpy as np
 import pytest
 
+from repro.core.async_burst_buffer import AsyncBurstBufferCheckpointer
 from repro.core.async_checkpoint import AsyncCheckpointer
 from repro.core.burst_buffer import BurstBufferCheckpointer
 from repro.core.checkpoint import CheckpointSaver
 from repro.core.faults import FaultInjected, FaultyStorage
+from repro.core.storage import NativeStorage
 
 
 def tree(seed=0):
@@ -201,3 +207,265 @@ class TestBurstBufferCrashConsistency:
         out = slow_saver.restore_pytree(t1)
         np.testing.assert_array_equal(out["w"], t1["w"])
         bb.close()
+
+
+class TestTornWriteModel:
+    """The torn-write fault mode itself: a frac prefix really lands."""
+
+    def test_partial_prefix_lands_then_device_dies(self, tmp_storage):
+        f = FaultyStorage(tmp_storage).torn_write(0.5, n_ops=1)
+        f.write_file("a", b"x" * 100)                # op 0: clean
+        with pytest.raises(FaultInjected):
+            f.write_file("b", b"y" * 100)            # op 1: torn
+        assert tmp_storage.size("b") == 50           # half the buffer landed
+        with pytest.raises(FaultInjected):
+            f.write_file("c", b"z")                  # sticky: device is dead
+        assert not tmp_storage.exists("c")
+        f.heal()
+        f.write_file("c", b"z")
+        assert f.read_file("c") == b"z"
+
+    def test_torn_targets_path_substring(self, tmp_storage):
+        f = FaultyStorage(tmp_storage).torn_write(0.25, on="marker")
+        f.write_file("data-0", b"d" * 8)             # non-matching: clean
+        with pytest.raises(FaultInjected):
+            f.write_file("the/marker", b"m" * 8)
+        assert tmp_storage.size("the/marker") == 2
+
+    def test_invalid_fraction_rejected(self, tmp_storage):
+        f = FaultyStorage(tmp_storage)
+        with pytest.raises(ValueError):
+            f.torn_write(1.0)
+        with pytest.raises(ValueError):
+            f.torn_write(-0.1)
+
+
+class TestReorderedFsyncModel:
+    """The volatile-cache durability model: unsynced writes are not durable,
+    and the *last-issued* one can survive a crash while earlier ones don't
+    (durability reordering — the adversary of unsynced commit markers)."""
+
+    def test_crash_rolls_back_unsynced_writes(self, tmp_storage):
+        f = FaultyStorage(tmp_storage).reordered_fsync()
+        f.write_file("a", b"old")
+        f.fsync_dir(".")                  # barrier: "a"=old is durable
+        f.write_file("a", b"new")         # volatile overwrite
+        f.write_file("b", b"data")        # volatile create
+        lost = f.crash(keep="none")
+        assert sorted(lost) == ["a", "b"]
+        assert tmp_storage.read_file("a") == b"old"  # pre-image restored
+        assert not tmp_storage.exists("b")           # never durable
+
+    def test_sync_write_is_a_barrier(self, tmp_storage):
+        f = FaultyStorage(tmp_storage).reordered_fsync()
+        f.write_file("a", b"1")
+        f.write_file("barrier", b"2", sync=True)  # flushes "a" too (syncfs)
+        f.write_file("c", b"3")
+        lost = f.crash(keep="none")
+        assert lost == ["c"]
+        assert tmp_storage.read_file("a") == b"1"
+        assert tmp_storage.read_file("barrier") == b"2"
+
+    def test_keep_last_spares_newest_volatile_write(self, tmp_storage):
+        f = FaultyStorage(tmp_storage).reordered_fsync()
+        f.write_file("data", b"D")
+        f.write_file("marker", b"M")      # issued last, hit the medium first
+        lost = f.crash(keep="last")
+        assert lost == ["data"]
+        assert not tmp_storage.exists("data")
+        assert tmp_storage.read_file("marker") == b"M"
+
+    def test_rename_does_not_launder_volatility(self, tmp_storage):
+        """tmp+rename of an unsynced file: the rename target inherits the
+        volatility and rolls back to *its* pre-image (the old marker)."""
+        tmp_storage.write_file("marker", b"OLD")
+        f = FaultyStorage(tmp_storage).reordered_fsync()
+        f.write_file("marker.tmp", b"NEW")    # volatile
+        f.rename("marker.tmp", "marker")
+        lost = f.crash(keep="none")
+        assert lost == ["marker"]
+        assert tmp_storage.read_file("marker") == b"OLD"
+
+    def test_crash_requires_arming(self, tmp_storage):
+        with pytest.raises(RuntimeError):
+            FaultyStorage(tmp_storage).crash()
+
+
+class TestTornWriteCrashConsistency:
+    def test_saver_torn_marker_keeps_previous(self, tmp_storage):
+        """A torn write on the marker path must not corrupt the commit: the
+        tmp+rename protocol leaves the old marker bytes untouched (a plain
+        truncate-and-rewrite of the marker would leave corrupt JSON and
+        make *both* steps unreachable)."""
+        faulty = FaultyStorage(tmp_storage)
+        saver = CheckpointSaver(faulty, "ckpt/m")
+        t1 = tree(1)
+        saver.save(1, t1)
+        faulty.torn_write(0.5, on="ckpt/checkpoint")
+        with pytest.raises(FaultInjected):
+            saver.save(2, tree(2))
+        faulty.heal()
+        assert saver.latest_step() == 1   # old marker parses, still JSON
+        out = saver.restore_pytree(t1)
+        np.testing.assert_array_equal(out["w"], t1["w"])
+
+    def test_saver_torn_data_shard_keeps_previous(self, tmp_storage):
+        faulty = FaultyStorage(tmp_storage)
+        saver = CheckpointSaver(faulty, "ckpt/m", n_shards=2)
+        t1 = tree(1)
+        saver.save(1, t1)
+        faulty.torn_write(0.7, n_ops=0)   # first shard write of next save
+        with pytest.raises(FaultInjected):
+            saver.save(2, tree(2))
+        faulty.heal()
+        assert saver.latest_step() == 1
+        out = saver.restore_pytree(t1)
+        np.testing.assert_array_equal(out["w"], t1["w"])
+
+    def test_bb_torn_drain_keeps_slow_consistent(self, fast_slow_storage):
+        """A drain range-write torn mid-buffer leaves a half-written file on
+        the slow tier — the un-advanced marker must keep it invisible."""
+        fast, slow = fast_slow_storage
+        faulty_slow = FaultyStorage(slow)
+        bb = BurstBufferCheckpointer(fast, faulty_slow, "ckpt/m",
+                                     drain_streams=2, drain_chunk=4096)
+        t1 = tree(1)
+        bb.save(1, t1)
+        bb.wait()
+        faulty_slow.torn_write(0.5, n_ops=1)
+        bb.save(2, tree(2))
+        with pytest.raises(FaultInjected):
+            bb.wait()
+        faulty_slow.heal()
+        slow_saver = CheckpointSaver(slow, "ckpt/m")
+        assert slow_saver.latest_step() == 1
+        out = slow_saver.restore_pytree(t1)
+        np.testing.assert_array_equal(out["w"], t1["w"])
+        assert bb.fast_saver.latest_step() == 2  # fast tier unaffected
+        bb.close()
+
+
+class TestReorderedFsyncCrashConsistency:
+    def test_drain_marker_is_a_durability_barrier(self, tmp_storage):
+        """Regression for the unsynced slow-tier marker: the drain's data
+        writes are volatile (``write_range(sync=False)``), so if the commit
+        marker were published without a sync barrier, durability reordering
+        could persist the *marker* while the data it commits rolls back —
+        a marker pointing at garbage.  The marker write must therefore be
+        ``sync=True`` (flushing everything issued before it) *before* the
+        rename publishes it: after ``crash(keep="last")`` the drained step
+        must restore bit-identically."""
+        with tempfile.TemporaryDirectory() as d2:
+            faulty_slow = FaultyStorage(NativeStorage(d2)).reordered_fsync()
+            bb = BurstBufferCheckpointer(tmp_storage, faulty_slow, "ckpt/m",
+                                         drain_streams=2, drain_chunk=4096)
+            t1 = tree(1)
+            bb.save(1, t1)
+            bb.wait()
+            bb.close()
+            faulty_slow.crash(keep="last")  # power loss after drain "done"
+            slow_saver = CheckpointSaver(faulty_slow, "ckpt/m")
+            assert slow_saver.latest_step() == 1
+            out = slow_saver.restore_pytree(t1)
+            np.testing.assert_array_equal(out["w"], t1["w"])
+
+    def test_asyncbb_survives_crash_after_every_save(self, tmp_storage):
+        """Same property through the fused engine, across multiple saves."""
+        with tempfile.TemporaryDirectory() as d2:
+            faulty_slow = FaultyStorage(NativeStorage(d2)).reordered_fsync()
+            abb = AsyncBurstBufferCheckpointer(
+                tmp_storage, faulty_slow, "ckpt/m",
+                drain_streams=2, drain_chunk=4096)
+            trees = {s: tree(s) for s in (1, 2, 3)}
+            for s in (1, 2, 3):
+                abb.save(s, trees[s])
+            abb.wait()
+            abb.close()
+            faulty_slow.crash(keep="last")
+            slow_saver = CheckpointSaver(faulty_slow, "ckpt/m")
+            latest = slow_saver.latest_step()
+            assert latest == 3
+            out = slow_saver.restore_pytree(trees[latest])
+            np.testing.assert_array_equal(out["w"], trees[latest]["w"])
+
+
+class TestAsyncBBInjectionSweep:
+    """Torn-write injection at *every* write op of the async burst buffer's
+    save/drain path, on each tier: whatever lands half-written, a restorable
+    step must survive on every tier that has a marker."""
+
+    PREFIX = "ckpt/m"
+
+    def _make(self, fast_dir, slow_dir):
+        fast = FaultyStorage(NativeStorage(fast_dir))
+        slow = FaultyStorage(NativeStorage(slow_dir))
+        abb = AsyncBurstBufferCheckpointer(
+            fast, slow, self.PREFIX, n_shards=2,
+            drain_streams=2, drain_chunk=4096)
+        return fast, slow, abb
+
+    def _count_step2_write_ops(self):
+        """Clean run: how many write ops does saving step 2 issue per tier?"""
+        with tempfile.TemporaryDirectory() as d1, \
+                tempfile.TemporaryDirectory() as d2:
+            fast, slow, abb = self._make(d1, d2)
+            abb.save(1, tree(1))
+            abb.wait()
+            f0 = sum(1 for op, _, _ in fast.op_log if op.startswith("write")
+                     or op == "append_file")
+            s0 = sum(1 for op, _, _ in slow.op_log if op.startswith("write")
+                     or op == "append_file")
+            abb.save(2, tree(2))
+            abb.wait()
+            abb.close()
+            f1 = sum(1 for op, _, _ in fast.op_log if op.startswith("write")
+                     or op == "append_file")
+            s1 = sum(1 for op, _, _ in slow.op_log if op.startswith("write")
+                     or op == "append_file")
+        return f1 - f0, s1 - s0
+
+    def _assert_tier_restorable(self, storage, trees):
+        """The tier's marker must point at a step that restores
+        bit-identically to what was saved."""
+        saver = CheckpointSaver(storage, self.PREFIX)
+        step = saver.latest_step()
+        assert step in trees, f"marker points at unknown step {step}"
+        out = saver.restore_pytree(trees[step])
+        np.testing.assert_array_equal(out["w"], trees[step]["w"])
+        return step
+
+    def test_every_injection_point(self):
+        n_fast, n_slow = self._count_step2_write_ops()
+        assert n_fast >= 4 and n_slow >= 4  # shards+index+meta+marker ranges
+        trees = {1: tree(1), 2: tree(2)}
+
+        for tier_name, n_ops in (("fast", n_fast), ("slow", n_slow)):
+            for k in range(n_ops):
+                with tempfile.TemporaryDirectory() as d1, \
+                        tempfile.TemporaryDirectory() as d2:
+                    fast, slow, abb = self._make(d1, d2)
+                    abb.save(1, trees[1])
+                    abb.wait()
+                    target = fast if tier_name == "fast" else slow
+                    target.torn_write(0.5, n_ops=k)
+                    abb.save(2, trees[2])
+                    with pytest.raises(FaultInjected):
+                        abb.wait()
+                    target.heal()
+                    try:
+                        abb.close()
+                    except FaultInjected:
+                        pass  # a second failure from the same cascade
+                    ctx = f"tier={tier_name}, injection point {k}/{n_ops}"
+                    # the un-injected fast tier always commits step 2; an
+                    # injected tier must still restore *a* step (usually 1)
+                    if tier_name == "fast":
+                        self._assert_tier_restorable(fast, trees)
+                        # stage died -> nothing was drained for step 2
+                        assert CheckpointSaver(
+                            slow, self.PREFIX).latest_step() == 1, ctx
+                    else:
+                        assert CheckpointSaver(
+                            fast, self.PREFIX).latest_step() == 2, ctx
+                        step = self._assert_tier_restorable(slow, trees)
+                        assert step == 1, ctx  # marker never advanced

@@ -7,6 +7,11 @@ from concurrent.futures import ThreadPoolExecutor
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # bare env (see `test` extra in pyproject.toml)
+    from _hypothesis_fallback import given, settings, strategies as st
+
 from repro.core.stats import IOTracer
 from repro.core.storage import (
     NativeStorage, SimulatedStorage, Storage, TIERS, TierSpec, make_storage,
@@ -185,6 +190,124 @@ class TestChunkedCopy:
             el = time.monotonic() - t0
             assert el >= 0.08, f"append_file not paced: {el}"
             assert st.size("f") == 2_000_000
+
+
+class TestWriteRange:
+    """pwrite-style positional writes — the drain engine's intra-file
+    parallelism primitive.  Identity contract: any partition of a buffer,
+    written as ranges in any order (even concurrently), reconstructs the
+    byte-identical file ``write_file`` would have produced."""
+
+    def test_out_of_order_ranges_reconstruct_file(self, tmp_storage):
+        rng = np.random.default_rng(0)
+        data = rng.integers(0, 256, size=1_000_003, dtype=np.uint8).tobytes()
+        tmp_storage.write_range("f", 500_000, data[500_000:])
+        tmp_storage.write_range("f", 0, data[:500_000])
+        assert tmp_storage.read_file("f") == data
+
+    def test_write_past_eof_zero_fills_gap(self, tmp_storage):
+        tmp_storage.write_range("f", 8, b"tail")
+        assert tmp_storage.read_file("f") == b"\x00" * 8 + b"tail"
+
+    def test_overwrite_inside_existing_file(self, tmp_storage):
+        tmp_storage.write_file("f", b"0123456789")
+        tmp_storage.write_range("f", 3, b"XYZ")
+        assert tmp_storage.read_file("f") == b"012XYZ6789"
+
+    def test_concurrent_ranges(self, tmp_storage):
+        rng = np.random.default_rng(1)
+        data = rng.integers(0, 256, size=512 * 1024, dtype=np.uint8).tobytes()
+        chunk = 37 * 1024  # deliberately unaligned
+        tasks = [(off, data[off:off + chunk])
+                 for off in range(0, len(data), chunk)]
+        rng.shuffle(tasks)
+        with ThreadPoolExecutor(4) as ex:
+            list(ex.map(lambda t: tmp_storage.write_range("g", t[0], t[1]),
+                        tasks))
+        assert tmp_storage.read_file("g") == data
+
+    def test_base_class_fallback(self):
+        """The generic read-modify-write default must satisfy the same
+        contract for Storage impls without a native pwrite."""
+
+        class MinimalStorage(Storage):
+            def __init__(self):
+                self.files = {}
+
+            def read_file(self, path):
+                return self.files[path]
+
+            def write_file(self, path, data, sync=False):
+                self.files[path] = bytes(data)
+
+            def exists(self, path):
+                return path in self.files
+
+            def size(self, path):
+                return len(self.files[path])
+
+        st = MinimalStorage()
+        st.write_range("f", 4, b"BB")
+        st.write_range("f", 0, b"AAAA")
+        st.write_range("f", 2, b"xy")
+        assert st.read_file("f") == b"AAxyBB"
+
+    def test_simulated_write_range_paced(self):
+        spec = TierSpec("slow", 10e6, 10e6, 10e6, 10e6, 0, 0)
+        with tempfile.TemporaryDirectory() as d:
+            st = SimulatedStorage(d, spec)
+            t0 = time.monotonic()
+            st.write_range("f", 0, b"x" * 1_000_000)  # 1MB @10MB/s >= 0.1s
+            el = time.monotonic() - t0
+            assert el >= 0.08, f"write_range not paced: {el}"
+            assert st.size("f") == 1_000_000
+
+
+class TestWriteRangeProperties:
+    """Hypothesis: write_range partition/permutation == write_file."""
+
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        size=st.integers(1, 4096),
+        n_cuts=st.integers(0, 8),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_random_partition_any_order_matches_write_file(
+            self, seed, size, n_cuts):
+        rng = np.random.default_rng(seed)
+        data = rng.integers(0, 256, size=size, dtype=np.uint8).tobytes()
+        cuts = sorted(set(
+            int(c) for c in rng.integers(1, size, size=n_cuts)
+        )) if size > 1 else []
+        bounds = [0] + cuts + [size]
+        pieces = [(bounds[i], data[bounds[i]:bounds[i + 1]])
+                  for i in range(len(bounds) - 1)]
+        order = rng.permutation(len(pieces))
+        with tempfile.TemporaryDirectory() as d:
+            st1 = NativeStorage(d)
+            st1.write_file("ref", data)
+            for i in order:
+                off, chunk = pieces[i]
+                st1.write_range("out", off, chunk)
+            assert st1.read_file("out") == st1.read_file("ref")
+
+    @given(seed=st.integers(0, 2**31 - 1), size=st.integers(1, 2048))
+    @settings(max_examples=20, deadline=None)
+    def test_write_then_append_equals_two_ranges(self, seed, size):
+        """write_file + append_file and two write_range calls are the same
+        bytes — the equivalence the drain relies on when it re-streams a
+        staged file as ranges."""
+        rng = np.random.default_rng(seed)
+        a = rng.integers(0, 256, size=size, dtype=np.uint8).tobytes()
+        b = rng.integers(0, 256, size=max(1, size // 2),
+                         dtype=np.uint8).tobytes()
+        with tempfile.TemporaryDirectory() as d:
+            st1 = NativeStorage(d)
+            st1.write_file("ref", a)
+            st1.append_file("ref", b)
+            st1.write_range("out", len(a), b)
+            st1.write_range("out", 0, a)
+            assert st1.read_file("out") == st1.read_file("ref")
 
 
 class TestTracerTimeline:
