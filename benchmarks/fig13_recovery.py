@@ -1,0 +1,256 @@
+"""Fig. 13 (ours): recovery cost — goodput under transient faults, and
+time-to-recover from a kill, per storage tier.
+
+The resilience layer's two promises, measured:
+
+* **Goodput under faults**: the interleaved shard pipeline reads the same
+  corpus clean and under a transient read-fault rate (default 1%, the
+  flaky-device model) absorbed by :class:`~repro.core.retry.
+  RetryingStorage`.  ``goodput_frac = faulty samples/s / clean samples/s``
+  — retries must absorb the faults *without quarantining shards* (every
+  record still arrives; ``gave_up == 0``), at a throughput tax bounded by
+  the re-read cost.
+* **Time-to-recover**: a training run is killed mid-epoch; recovery is
+  :meth:`~repro.core.recovery.CheckpointManager.resume` — restore params
+  from the newest valid checkpoint *plus* re-position the
+  :class:`~repro.core.dataset.ResumableIterator` by replaying the pipeline
+  to the checkpointed offset.  ``recover_s`` is that full wall time (the
+  paper's "restart quickly from a checkpoint" observable); both components
+  scale with tier read throughput.
+
+Retention is exercised along the way: the training run saves more steps
+than ``keep_last`` and the payload records checkpoint files on disk, which
+the manager's GC must hold bounded.
+
+Machine-readable ``BENCH_recovery.json``; the CI regression gate covers
+the ``samples_per_s`` and ``goodput_frac`` leaves (``recover_s`` is
+reported but not gated — lower is better, the gate assumes higher-better).
+
+Acceptance: on the hdd model at a 1% fault rate, goodput >= 0.9x clean
+and no shard was quarantined.
+
+    PYTHONPATH=src python -m benchmarks.fig13_recovery [--smoke]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro import metrics
+from repro.core import make_storage
+from repro.core.dataset import Dataset, ResumableIterator
+from repro.core.faults import FaultyStorage
+from repro.core.recovery import CheckpointManager
+from repro.core.retry import RetryPolicy, RetryingStorage
+
+from .common import RESULTS_DIR, SCRATCH, emit
+
+TIERS = ("hdd", "ssd", "optane", "lustre")
+FAULT_RATE = float(os.environ.get("REPRO_FAULT_RATE", "0.01"))
+#: Tight backoff: the benchmark's retry cost should be the simulated
+#: re-read, not real sleep time.
+POLICY = RetryPolicy(max_attempts=5, base_delay_s=1e-4, max_delay_s=1e-3)
+
+
+def write_corpus(storage, n_shards: int, recs_per_shard: int,
+                 rec_bytes: int):
+    rng = np.random.default_rng(0)
+    paths = []
+    for i in range(n_shards):
+        blob = rng.integers(0, 256, size=recs_per_shard * rec_bytes,
+                            dtype=np.uint8).tobytes()
+        p = f"data/shard-{i:04d}.rrf"
+        storage.write_file(p, blob)
+        paths.append(p)
+    return paths
+
+
+def shard_pipeline(storage, paths, rec_bytes: int, seed: int = 0) -> Dataset:
+    """The vectorized engine shape: interleaved shard streaming.
+
+    Records are fetched one ``read_range`` each so the injected
+    per-*read-op* fault rate maps onto a per-*record* fault rate — the
+    flaky-device model the retry layer is sized for."""
+
+    def stream_shard(path):
+        def gen():
+            size = storage.size(path)
+            for o in range(0, size, rec_bytes):
+                yield storage.read_range(path, o, rec_bytes)
+        return gen()
+
+    return (Dataset.from_tensor_slices(list(paths))
+            .shuffle(len(paths), seed=seed)
+            .interleave(stream_shard, cycle_length=4, block_length=4,
+                        num_parallel_calls=4)
+            .map(lambda r: np.int64(len(r)))
+            .ignore_errors()
+            .batch(8, drop_remainder=False))
+
+
+def read_all(storage, paths, rec_bytes: int, n_passes: int = 2) -> float:
+    """Stream the whole corpus ``n_passes`` times; return samples/s."""
+    n = 0
+    t0 = time.monotonic()
+    for p in range(n_passes):
+        for batch in shard_pipeline(storage, paths, rec_bytes, seed=p):
+            n += len(batch)
+    dt = time.monotonic() - t0
+    return n / max(dt, 1e-9)
+
+
+def make_state(mb: float):
+    rng = np.random.default_rng(1)
+    n = int(mb * 1024 * 256)
+    return {"w": rng.normal(size=(n,)).astype(np.float32),
+            "step": np.int64(0)}
+
+
+def measure_recovery(storage, paths, rec_bytes: int, state_mb: float,
+                     keep_last: int, n_saves: int):
+    """Kill a run mid-epoch and time CheckpointManager.resume().
+
+    Returns (recover_s, recovered_step, ckpt_files_on_disk)."""
+    n_batches = sum(1 for _ in shard_pipeline(storage, paths, rec_bytes,
+                                              seed=0))
+    state = make_state(state_mb)
+    mgr = CheckpointManager(storage, "ckpt/m", keep_last=keep_last)
+    it = ResumableIterator(
+        lambda ep: shard_pipeline(storage, paths, rec_bytes, seed=ep))
+    # consume half the epoch (in batches), checkpointing n_saves times on
+    # the way — more saves than keep_last, so GC retention is exercised
+    half = max(1, n_batches // 2)
+    consumed = 0
+    save_at = {max(1, half * (k + 1) // n_saves) for k in range(n_saves)}
+    for batch in it:
+        consumed += 1
+        if consumed in save_at:
+            state["step"] = np.int64(consumed)
+            mgr.save(consumed, state,
+                     extra_meta={"pipeline": it.state()})
+        if consumed >= half:
+            break
+    it.close()   # the kill: this process's iterator state is gone
+    ckpt_files = len([n for n in storage.listdir("ckpt")
+                      if n != "checkpoint"])
+
+    # restart: fresh manager, fresh iterator, one timed resume()
+    mgr2 = CheckpointManager(storage, "ckpt/m", keep_last=keep_last)
+    it2 = ResumableIterator(
+        lambda ep: shard_pipeline(storage, paths, rec_bytes, seed=ep))
+    skeleton = make_state(state_mb)
+    t0 = time.monotonic()
+    res = mgr2.resume(skeleton, data_iter=it2)
+    recover_s = time.monotonic() - t0
+    it2.close()
+    assert res.step is not None and res.step <= half
+    assert len(mgr2.all_steps()) <= keep_last + 1
+    return recover_s, res.step, ckpt_files
+
+
+def run(n_shards=16, recs_per_shard=32, rec_bytes=64 * 1024,
+        state_mb=4.0, keep_last=3, n_saves=5, fault_rate=FAULT_RATE,
+        n_passes=2, smoke=False, name="fig13_recovery",
+        json_path=None) -> dict:
+    rows = []
+    tiers_out = {}
+    with tempfile.TemporaryDirectory(dir=SCRATCH) as root:
+        for tier in TIERS:
+            sim = make_storage(tier, os.path.join(root, tier))
+            paths = write_corpus(sim, n_shards, recs_per_shard, rec_bytes)
+
+            faulty = FaultyStorage(sim).transient(
+                rate=fault_rate, ops=("read",), seed=32)
+            rs = RetryingStorage(faulty, POLICY)
+            reg = metrics.start()
+            try:
+                # metrics stay on for both passes so the comparison is
+                # apples-to-apples; one untimed pass warms the reader pool
+                read_all(sim, paths, rec_bytes, n_passes=1)
+                clean_sps = read_all(sim, paths, rec_bytes, n_passes=n_passes)
+                faulty_sps = read_all(rs, paths, rec_bytes, n_passes=n_passes)
+                counters = reg.collect()["counters"]
+                quarantined = int(sum(
+                    v for k, v in counters.items()
+                    if k.startswith("pipeline.quarantined_shards")))
+            finally:
+                metrics.stop()
+            goodput = faulty_sps / max(clean_sps, 1e-9)
+
+            recover_s, rec_step, ckpt_files = measure_recovery(
+                sim, paths, rec_bytes, state_mb, keep_last, n_saves)
+
+            tiers_out[tier] = {
+                "clean": {"samples_per_s": round(clean_sps, 2)},
+                "faulty": {"samples_per_s": round(faulty_sps, 2)},
+                "goodput_frac": round(goodput, 4),
+                "retries": rs.retries,
+                "gave_up": rs.gave_up,
+                "quarantined_shards": quarantined,
+                "recover_s": round(recover_s, 4),
+                "recovered_step": rec_step,
+                "ckpt_files_on_disk": ckpt_files,
+            }
+            rows.append(
+                f"tier={tier},clean_samples_per_s={clean_sps:.1f},"
+                f"faulty_samples_per_s={faulty_sps:.1f},"
+                f"goodput_frac={goodput:.3f},retries={rs.retries},"
+                f"gave_up={rs.gave_up},quarantined={quarantined},"
+                f"recover_s={recover_s:.3f}")
+
+    hdd = tiers_out["hdd"]
+    ok_goodput = hdd["goodput_frac"] >= 0.9
+    ok_quarantine = all(t["quarantined_shards"] == 0 and t["gave_up"] == 0
+                        for t in tiers_out.values())
+    derived = (
+        f"hdd goodput under {fault_rate:.0%} transient read faults = "
+        f"{hdd['goodput_frac']:.3f} (acceptance: >=0.9, no quarantine); "
+        f"recover_s: " + ", ".join(
+            f"{t}={tiers_out[t]['recover_s']:.3f}" for t in TIERS))
+    emit(name, rows, derived)
+
+    payload = {
+        "benchmark": name,
+        "config": {
+            "n_shards": n_shards, "recs_per_shard": recs_per_shard,
+            "rec_bytes": rec_bytes, "state_mb": state_mb,
+            "keep_last": keep_last, "n_saves": n_saves,
+            "fault_rate": fault_rate, "n_passes": n_passes,
+            "retry": {"max_attempts": POLICY.max_attempts,
+                      "base_delay_s": POLICY.base_delay_s},
+            "tiers": list(TIERS),
+        },
+        "tiers": tiers_out,
+        "acceptance": {"hdd_goodput_ok": ok_goodput,
+                       "no_quarantine": ok_quarantine},
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out_json = json_path or os.path.join(RESULTS_DIR, "BENCH_recovery.json")
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {out_json}")
+    return payload
+
+
+def run_smoke() -> dict:
+    """Tiny-scale CI variant: same output shape, seconds of runtime."""
+    return run(n_shards=6, recs_per_shard=8, rec_bytes=16 * 1024,
+               state_mb=0.5, n_saves=4, smoke=True)
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    payload = run_smoke() if smoke else run()
+    acc = payload["acceptance"]
+    ok = acc["hdd_goodput_ok"] and acc["no_quarantine"]
+    print(f"# hdd goodput ok={acc['hdd_goodput_ok']} "
+          f"no_quarantine={acc['no_quarantine']}")
+    if not ok:
+        sys.exit(1)

@@ -41,10 +41,12 @@ REPORTS_DIR = os.environ.get("REPRO_BENCH_DIR", "reports")
 # higher-is-better throughput leaves; latency metrics would need the
 # opposite sense and are deliberately not gated here.  blocked_frac_saved
 # (fig12) is a ratio in [0, 1] — fraction of direct-checkpoint blocked
-# time the async burst buffer eliminates — so "higher is better" holds.
+# time the async burst buffer eliminates — so "higher is better" holds,
+# and likewise goodput_frac (fig13: faulty/clean throughput under the
+# retry layer; recover_s is lower-is-better and deliberately ungated).
 GATED_LEAVES = ("samples_per_s", "bytes_per_s", "speedup",
                 "speedup_sharded_vs_legacy", "steps_per_s",
-                "blocked_frac_saved")
+                "blocked_frac_saved", "goodput_frac")
 
 DEFAULT_TOLERANCE = 0.25
 SMOKE_TOLERANCE = 0.50   # tiny sweeps on shared CI boxes are noisy

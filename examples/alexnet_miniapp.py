@@ -10,6 +10,19 @@ paper's prefetch-overlap observable) plus a dstat-style I/O trace.
 report); ``--metrics OUT.jsonl`` adds live telemetry (sampled gauge/counter
 time series, Prometheus snapshot, per-step stall detection).  The two
 compose: with both, the trace report embeds the metrics timeline.
+
+``--ckpt DIR`` turns on fault-tolerant checkpointing: a
+:class:`~repro.core.recovery.CheckpointManager` saves params *and* the
+input-pipeline position into DIR every ``--ckpt-every`` steps.  Kill the
+run, rerun with ``--resume``, and it restores the newest **valid**
+checkpoint (walking back past torn/corrupt ones) and repositions the
+iterator so no sample is skipped or replayed — the corpus is seeded, so a
+rerun regenerates identical data::
+
+    PYTHONPATH=src python examples/alexnet_miniapp.py \\
+        --ckpt /tmp/alexckpt --steps 8
+    PYTHONPATH=src python examples/alexnet_miniapp.py \\
+        --ckpt /tmp/alexckpt --resume --steps 8
 """
 import argparse, os, sys, tempfile
 sys.path.insert(0, "src")
@@ -19,8 +32,8 @@ import jax.numpy as jnp
 
 from repro import metrics, trace
 from repro.configs import ALEXNET_SMOKE as CFG
-from repro.core import IOTracer, image_pipeline, make_storage, \
-    sharded_image_pipeline
+from repro.core import CheckpointManager, IOTracer, ResumableIterator, \
+    image_pipeline, make_storage, sharded_image_pipeline
 from repro.core import records
 from repro.models import alexnet as A
 from repro.train.trainer import Trainer
@@ -46,7 +59,18 @@ def main():
                          "sketches, per-step heartbeat) into a JSONL time "
                          "series and print the final Prometheus-text "
                          "snapshot; composes with --trace")
+    ap.add_argument("--ckpt", metavar="DIR", default=None,
+                    help="checkpoint params + pipeline position into DIR "
+                         "via CheckpointManager (keep-last retention, "
+                         "corruption-aware restore)")
+    ap.add_argument("--ckpt-every", type=int, default=5,
+                    help="save every N steps (with --ckpt; default 5)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest valid checkpoint from --ckpt "
+                         "and continue — params and input position")
     args = ap.parse_args()
+    if args.resume and not args.ckpt:
+        ap.error("--resume requires --ckpt DIR")
 
     tracer = IOTracer(0.25)
     st = make_storage(args.tier, tempfile.mkdtemp(), tracer, time_scale=0.2)
@@ -58,19 +82,31 @@ def main():
             st, 128, mean_hw=(64, 64), n_classes=CFG.n_classes)
     tracer.reset()
 
-    if args.sharded:
-        ds = sharded_image_pipeline(st, shard_paths, shard_labels,
-                                    batch_size=16,
-                                    cycle_length=args.threads,
-                                    num_parallel_calls=args.threads,
-                                    prefetch=args.prefetch,
-                                    out_hw=(CFG.in_hw, CFG.in_hw),
-                                    repeat=True)
+    def build_pipeline(seed=0, repeat=True):
+        if args.sharded:
+            return sharded_image_pipeline(st, shard_paths, shard_labels,
+                                          batch_size=16,
+                                          cycle_length=args.threads,
+                                          num_parallel_calls=args.threads,
+                                          prefetch=args.prefetch,
+                                          out_hw=(CFG.in_hw, CFG.in_hw),
+                                          seed=seed, repeat=repeat)
+        return image_pipeline(st, paths, labels, batch_size=16,
+                              num_parallel_calls=args.threads,
+                              prefetch=args.prefetch,
+                              out_hw=(CFG.in_hw, CFG.in_hw),
+                              seed=seed, repeat=repeat)
+
+    ckpt_mgr = None
+    if args.ckpt:
+        # resumable position needs finite epochs: one Dataset per epoch,
+        # shuffled by a per-epoch seed the factory can replay on restore
+        ds = ResumableIterator(lambda ep: build_pipeline(seed=ep,
+                                                         repeat=False))
+        ckpt_mgr = CheckpointManager(make_storage("native", args.ckpt),
+                                     "ckpt/alexnet", keep_last=3)
     else:
-        ds = image_pipeline(st, paths, labels, batch_size=16,
-                            num_parallel_calls=args.threads,
-                            prefetch=args.prefetch,
-                            out_hw=(CFG.in_hw, CFG.in_hw), repeat=True)
+        ds = build_pipeline(repeat=True)
 
     params = A.init_params(jax.random.PRNGKey(0), CFG)
     state = {"params": params, "step": jnp.int32(0)}
@@ -91,7 +127,19 @@ def main():
         sampler = metrics.Sampler(interval_s=0.1, jsonl_path=args.metrics)
         sampler.start()
         stall = metrics.StallDetector(min_samples=4)
-    tr = Trainer(train_step, state, iter(ds), stall_detector=stall)
+    tr = Trainer(train_step, state, iter(ds), stall_detector=stall,
+                 checkpointer=ckpt_mgr, ckpt_every=args.ckpt_every,
+                 resume=args.resume)
+    if args.resume:
+        if tr.recovered_step is not None:
+            pos = ds.state()
+            print(f"resumed from step {tr.recovered_step} "
+                  f"(latest valid checkpoint in {args.ckpt}) — input "
+                  f"pipeline at epoch {pos['epoch']}, "
+                  f"batch offset {pos['offset']}")
+        else:
+            print(f"--resume: no valid checkpoint under {args.ckpt}; "
+                  f"starting fresh")
     tr.run(args.steps)
     tr.close()  # repeat() pipeline: stop the prefetch producer promptly
     rep = tr.report()

@@ -22,8 +22,17 @@
 * :mod:`repro.core.async_burst_buffer` — the fused engine: snapshot-only
   blocking, background fast-tier stage, then the multi-stream drain —
   training never blocks past the host snapshot.
-* :mod:`repro.core.faults` — :class:`FaultyStorage` fault injection, the
-  crash-consistency proof harness for all of the above.
+* :mod:`repro.core.faults` — :class:`FaultyStorage` fault injection
+  (sticky failures, torn writes, reordered fsync + crash, and non-sticky
+  transients), the crash-consistency proof harness for all of the above.
+* :mod:`repro.core.retry` — :class:`RetryPolicy` (exponential backoff +
+  full jitter + deadline) and the transparent :class:`RetryingStorage`
+  wrapper that absorbs transient storage faults below every pipeline and
+  checkpoint path.
+* :mod:`repro.core.recovery` — :class:`CheckpointManager`: retention
+  (keep-last-k + keep-every-n), corruption-aware ``latest_valid()``
+  restore, crash-safe GC, and TrainState-level ``resume()`` that also
+  re-positions a :class:`~repro.core.dataset.ResumableIterator`.
 * :mod:`repro.core.microbench` — STREAM-like ingestion benchmark.
 * :mod:`repro.core.stats` — dstat-like I/O timeline view, an adapter over
   the :mod:`repro.trace` collector.
@@ -36,7 +45,8 @@ tf-Darshan-style subsystem.  Tracing is off by default; call
 ``repro.trace.dump_chrome_trace`` (Perfetto) or summarize with
 ``repro.trace.to_markdown``.
 """
-from .dataset import Dataset, image_pipeline, sharded_image_pipeline
+from .dataset import (Dataset, ResumableIterator, image_pipeline,
+                      sharded_image_pipeline)
 from .prefetcher import PrefetchIterator, prefetch_to_device
 from .readerpool import ReaderPool, reader_pool
 from .storage import Storage, NativeStorage, SimulatedStorage, TIERS, make_storage
@@ -44,16 +54,22 @@ from .checkpoint import CheckpointSaver
 from .async_checkpoint import AsyncCheckpointer, AsyncSaveHandle
 from .async_burst_buffer import AsyncBurstBufferCheckpointer
 from .burst_buffer import BurstBufferCheckpointer, DirectCheckpointer
-from .faults import FaultInjected, FaultyStorage
+from .faults import FaultInjected, FaultyStorage, TransientFault
+from .retry import RetryPolicy, RetryingStorage
+from .recovery import CheckpointManager, ResumeResult, latest_valid_step, \
+    validate_step
 from .stats import IOTracer, StepTimer
 
 __all__ = [
-    "Dataset", "image_pipeline", "sharded_image_pipeline",
+    "Dataset", "ResumableIterator", "image_pipeline",
+    "sharded_image_pipeline",
     "PrefetchIterator", "prefetch_to_device", "ReaderPool", "reader_pool",
     "Storage", "NativeStorage", "SimulatedStorage", "TIERS", "make_storage",
     "CheckpointSaver", "AsyncCheckpointer", "AsyncSaveHandle",
     "AsyncBurstBufferCheckpointer",
     "BurstBufferCheckpointer", "DirectCheckpointer",
-    "FaultInjected", "FaultyStorage",
+    "FaultInjected", "FaultyStorage", "TransientFault",
+    "RetryPolicy", "RetryingStorage",
+    "CheckpointManager", "ResumeResult", "latest_valid_step", "validate_step",
     "IOTracer", "StepTimer",
 ]

@@ -54,7 +54,16 @@ class DrainRecord:
 
 
 class DirectCheckpointer:
-    """Baseline: checkpoint synchronously to one storage tier."""
+    """Baseline: checkpoint synchronously to one storage tier.
+
+    Error-delivery contract (parity with the async engines): a save failure
+    raises *inline, exactly once* — there is no background work, so
+    ``wait()``/``close()`` never have a deferred error to surface.  What
+    they do share is the handle-lifecycle discipline: ``close()`` is
+    idempotent and ``save()`` after ``close()`` raises, so engine-agnostic
+    callers (Trainer, benchmarks) can treat all four checkpointers
+    identically.
+    """
 
     def __init__(self, storage, prefix: str = "ckpt/model", *, keep: int = 5,
                  n_shards: int = 1, sync: bool = True, quantize=None,
@@ -64,8 +73,11 @@ class DirectCheckpointer:
             quantize=quantize, io_threads=io_threads,
         )
         self.blocked_s: List[float] = []
+        self._closed = False
 
     def save(self, step: int, tree: Any, extra_meta: Optional[dict] = None) -> SaveResult:
+        if self._closed:
+            raise RuntimeError("save() on a closed DirectCheckpointer")
         r = self.saver.save(step, tree, extra_meta)
         self.blocked_s.append(r.seconds)
         return r
@@ -79,11 +91,11 @@ class DirectCheckpointer:
     def latest_step(self) -> Optional[int]:
         return self.saver.latest_step()
 
-    def wait(self) -> None:  # interface parity
+    def wait(self) -> None:  # interface parity: nothing in flight, no error
         return
 
     def close(self) -> None:
-        return
+        self._closed = True  # idempotent; later save() raises
 
 
 class BurstBufferCheckpointer:

@@ -300,6 +300,11 @@ class Dataset:
                     try:
                         slot.it = iter(fn(slot.item))
                     except Exception as e:
+                        # a shard we could not even open is dropped from the
+                        # cycle — with a RetryingStorage underneath, the
+                        # error arriving here means the retry budget is
+                        # already exhausted
+                        metrics.inc("pipeline.quarantined_shards")
                         return [_ErrorMarker(e)], True
                 for _ in range(block_length):
                     try:
@@ -307,6 +312,7 @@ class Dataset:
                     except StopIteration:
                         return out, True
                     except Exception as e:
+                        metrics.inc("pipeline.quarantined_shards")
                         out.append(_ErrorMarker(e))
                         return out, True
                 return out, False
@@ -640,6 +646,113 @@ class Dataset:
 
     def as_numpy(self) -> List[Any]:
         return list(self)
+
+
+class ResumableIterator:
+    """Epoch-aware iterator with a lightweight save/restore position.
+
+    The tf.data-style iterator checkpoint: position is ``{"epoch": e,
+    "offset": k}`` — *k elements of epoch e already delivered to the
+    consumer*.  :meth:`state` is cheap enough to attach to every checkpoint
+    (the trainer stores it in ``extra_meta["pipeline"]``);
+    :meth:`restore_state` re-opens epoch ``e`` and deterministically skips
+    ``k`` elements, so a resumed run neither skips nor replays samples.
+
+    ``source`` is either a :class:`Dataset` (re-iterated per epoch — same
+    element order every epoch) or a factory ``epoch -> Dataset`` for
+    per-epoch seeding (``lambda ep: pipeline(seed=base_seed + ep)``); with
+    a factory, skip-based restore still lands on the exact element because
+    the factory rebuilds epoch ``e``'s order from its seed.  The offset
+    counts elements *delivered through this iterator*: keep it downstream
+    of ``prefetch`` (wrap the whole pipeline) so buffered-but-unconsumed
+    elements are not counted as seen.
+
+    Determinism caveat: skip-restore replays the pipeline's element order,
+    which is deterministic for ``deterministic=True`` stages (the default);
+    under ``ignore_errors`` the offset counts *surviving* elements, so a
+    fault that is present in one run and absent in the replay shifts the
+    alignment — exactly tf.data's contract.
+    """
+
+    def __init__(self, source, *, epochs: Optional[int] = None):
+        if isinstance(source, Dataset):
+            self._factory = lambda epoch: source
+        elif callable(source):
+            self._factory = source
+        else:
+            raise TypeError(
+                f"source must be a Dataset or epoch->Dataset factory, "
+                f"got {type(source).__name__}")
+        self.epochs = epochs
+        self._epoch = 0
+        self._offset = 0
+        self._it: Optional[Iterator] = None
+        self._done = False
+
+    # -- position ----------------------------------------------------------------
+    def state(self) -> dict:
+        """Snapshot the position (JSON-serializable, O(1))."""
+        return {"epoch": self._epoch, "offset": self._offset, "version": 1}
+
+    def restore_state(self, state: dict) -> None:
+        """Re-open at ``state`` by skipping already-delivered elements."""
+        self.close()
+        self._epoch = int(state["epoch"])
+        self._offset = 0
+        self._done = False
+        self._it = iter(self._factory(self._epoch))
+        target = int(state["offset"])
+        with trace.span(trace.STAGE_DATA_WAIT,
+                        f"resume_skip:{target}@epoch{self._epoch}"):
+            for _ in range(target):
+                try:
+                    next(self._it)
+                except StopIteration:
+                    # position beyond epoch end (e.g. the corpus shrank):
+                    # roll into the next epoch rather than fail the resume
+                    break
+                self._offset += 1
+        metrics.inc("pipeline.resume_skipped", self._offset)
+
+    # -- iteration ---------------------------------------------------------------
+    def __iter__(self) -> "ResumableIterator":
+        return self
+
+    def __next__(self) -> Any:
+        if self._done:
+            raise StopIteration
+        if self._it is None:
+            self._it = iter(self._factory(self._epoch))
+        while True:
+            try:
+                item = next(self._it)
+            except StopIteration:
+                _close_iter(self._it)
+                self._it = None
+                empty_epoch = self._offset == 0
+                self._epoch += 1
+                self._offset = 0
+                if (self.epochs is not None and self._epoch >= self.epochs) \
+                        or empty_epoch:
+                    # empty epoch: the source is exhausted/empty — stop
+                    # instead of spinning on zero-element epochs forever
+                    self._done = True
+                    raise
+                self._it = iter(self._factory(self._epoch))
+                continue
+            self._offset += 1
+            return item
+
+    def close(self) -> None:
+        if self._it is not None:
+            _close_iter(self._it)
+            self._it = None
+
+    def __enter__(self) -> "ResumableIterator":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 def image_pipeline(

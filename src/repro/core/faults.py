@@ -16,6 +16,12 @@ failures at exact, reproducible points:
   leave a half-written file; real power loss does — this mode proves the
   commit protocol tolerates partially-landed data *and* partially-landed
   markers (which is why markers must move by atomic rename, not rewrite).
+* ``transient(n_ops=k, rate=p, on=substring)`` — **non-sticky** faults: the
+  device is flaky, not dead.  The next ``k`` matching ops fail (then the
+  device works again), and/or each matching op fails independently with
+  probability ``p`` (seeded, reproducible).  The op raises *before* any
+  bytes move, so a retry is always safe.  This is the model
+  :class:`repro.core.retry.RetryingStorage` exists to absorb.
 * ``reordered_fsync()`` — the device acknowledges writes into a volatile
   cache and is free to persist them out of order: only a ``sync=True``
   write (or ``fsync_dir``) is a durability **barrier** that flushes
@@ -47,6 +53,7 @@ Example — prove a save killed mid-write keeps the previous step::
 """
 from __future__ import annotations
 
+import random
 import threading
 from typing import Dict, List, Optional, Sequence
 
@@ -56,6 +63,13 @@ from .storage import Storage
 
 class FaultInjected(OSError):
     """The error :class:`FaultyStorage` raises at its trigger point."""
+
+
+class TransientFault(FaultInjected):
+    """A non-sticky injected error: the op failed but the device is alive.
+
+    Raised before the inner op runs (no bytes moved), so retrying the same
+    call is always safe — the contract ``RetryingStorage`` relies on."""
 
 
 _WRITE_OPS = ("write_file", "append_file", "write_range")
@@ -77,6 +91,13 @@ class FaultyStorage(Storage):
         self._count = 0
         self._tripped = False
         self.op_log: List[tuple] = []  # (op, path, nbytes) of every attempt
+        # transient (non-sticky) fault state
+        self._transient_left = 0
+        self._transient_rate = 0.0
+        self._transient_on: Optional[str] = None
+        self._transient_ops: Sequence[str] = ()
+        self._transient_rng = random.Random(0)
+        self.transients_injected = 0
         # reordered-fsync journaling: volatile (un-barriered) writes since
         # the last sync=True write / fsync_dir, with pre-images for rollback
         self._journal_mode = False
@@ -122,6 +143,26 @@ class FaultyStorage(Storage):
             self._tripped = False
         return self
 
+    def transient(self, n_ops: int = 0, rate: float = 0.0,
+                  on: Optional[str] = None, ops: Sequence[str] = ("read",),
+                  seed: int = 0) -> "FaultyStorage":
+        """Arm **non-sticky** transient faults (a flaky device, not a dead
+        one): the next ``n_ops`` matching ops fail and then the device works
+        again, and/or each matching op fails independently with probability
+        ``rate`` (seeded, so a given run is reproducible).  ``on=substring``
+        restricts faults to ops whose path matches.  The fault fires before
+        the inner op runs, so no bytes land and a retry of the same call is
+        safe."""
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError(f"transient rate must be in [0, 1], got {rate}")
+        with self._lock:
+            self._transient_left = int(n_ops)
+            self._transient_rate = float(rate)
+            self._transient_on = on
+            self._transient_ops = self._expand(ops)
+            self._transient_rng = random.Random(seed)
+        return self
+
     def reordered_fsync(self) -> "FaultyStorage":
         """Arm the volatile-cache durability model: un-barriered writes are
         journaled (with pre-images) and survive only until :meth:`crash`;
@@ -165,6 +206,10 @@ class FaultyStorage(Storage):
             self._torn_frac = None
             self._count = 0
             self._tripped = False
+            self._transient_left = 0
+            self._transient_rate = 0.0
+            self._transient_on = None
+            self._transient_ops = ()
         return self
 
     @staticmethod
@@ -186,6 +231,22 @@ class FaultyStorage(Storage):
         the prefix write, then raises) — ``None`` means proceed normally."""
         with self._lock:
             self.op_log.append((op, path, nbytes))
+            # transient (non-sticky) faults first: a flaky device, checked
+            # independently of the sticky arming below
+            if op in self._transient_ops and (
+                    self._transient_on is None or self._transient_on in path):
+                trip = False
+                if self._transient_left > 0:
+                    self._transient_left -= 1
+                    trip = True
+                elif (self._transient_rate > 0.0
+                      and self._transient_rng.random() < self._transient_rate):
+                    trip = True
+                if trip:
+                    self.transients_injected += 1
+                    metrics.inc("storage.faults_injected", 1, op=op)
+                    raise TransientFault(
+                        f"injected transient fault on {op}({path!r})")
             if op not in self._ops:
                 return None
             if self._tripped and self.sticky:

@@ -1,0 +1,217 @@
+"""Transient-fault retry for storage I/O (paper §III-C: user-level retry).
+
+The TensorFlow system paper's fault-tolerance story is user-level
+checkpointing *plus retry* — transient storage errors (a flaky NFS mount, a
+Lustre OST failing over, an object store returning 5xx) must be absorbed at
+the I/O layer, not surfaced to kill a multi-day run.  This module is that
+layer:
+
+* :class:`RetryPolicy` — bounded exponential backoff with **full jitter**
+  (delay drawn uniformly from ``[0, min(max_delay, base * 2**attempt)]``,
+  the AWS-style variant that avoids retry synchronization across threads),
+  a per-op wall-clock ``deadline_s``, and a retryable-error classifier.
+  Defaults: 5 attempts, 10 ms base, 1 s cap, 30 s deadline.
+* :class:`RetryingStorage` — a transparent :class:`Storage` wrapper that
+  applies the policy to every data op (reads, writes, fsync).  Because
+  every pipeline stage and checkpointer talks to plain ``Storage``,
+  wrapping once makes ``Dataset``/``ReaderPool``/``interleave`` reads and
+  checkpoint stage/drain writes retry transparently — no call-site changes.
+
+Classification: an error is retried iff the classifier says so.  The
+default retries :class:`OSError`/:class:`TimeoutError` (which covers
+:class:`repro.core.faults.FaultInjected`) but never the *semantic* OSErrors
+— ``FileNotFoundError``, ``PermissionError``, ``IsADirectoryError``,
+``NotADirectoryError`` — retrying those just burns the deadline.
+
+Give-up semantics: when the budget (attempts or deadline) is exhausted the
+**original** exception is re-raised, so downstream semantics are unchanged
+— ``ignore_errors`` still sees the same error type and drops the element,
+and ``interleave`` quarantines the shard (``pipeline.quarantined_shards``)
+only at that point.  Observability: every retry increments
+``storage.retries`` and every exhausted budget ``storage.gave_up`` (live
+metrics, plus plain ``.retries``/``.gave_up`` attribute counters).
+
+Idempotency note: faults modelled by :class:`FaultyStorage` fire *before*
+bytes move, so retrying any op is safe.  On real storage, ``write_file`` /
+``write_range`` / reads are idempotent by construction; ``append_file`` is
+only safe to retry when the failed attempt did not land bytes — backends
+where a failed append may have partially applied should disable write
+retries (``retry_writes=False``).
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+from .. import metrics
+from .storage import Storage
+
+#: OSError subclasses that signal a semantic problem, not a flaky device.
+_NON_RETRYABLE = (FileNotFoundError, PermissionError, IsADirectoryError,
+                  NotADirectoryError)
+
+
+def default_classifier(exc: BaseException) -> bool:
+    """Retry I/O-flavoured errors; never semantic or programming errors."""
+    if isinstance(exc, _NON_RETRYABLE):
+        return False
+    return isinstance(exc, (OSError, TimeoutError))
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded exponential backoff + full jitter + per-op deadline.
+
+    ``max_attempts`` counts *total* tries (1 = no retry).  ``deadline_s``
+    caps the wall clock spent on one logical op including backoff sleeps;
+    ``None`` disables it.  ``retryable`` classifies which exceptions are
+    worth another try.
+    """
+
+    max_attempts: int = 5
+    base_delay_s: float = 0.01
+    max_delay_s: float = 1.0
+    deadline_s: Optional[float] = 30.0
+    retryable: Callable[[BaseException], bool] = field(
+        default=default_classifier)
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(
+                f"max_attempts must be >= 1, got {self.max_attempts}")
+
+    def backoff_s(self, retry_index: int, rng: random.Random) -> float:
+        """Full-jitter delay before retry ``retry_index`` (0-based)."""
+        cap = min(self.max_delay_s,
+                  self.base_delay_s * (2.0 ** retry_index))
+        return rng.uniform(0.0, max(0.0, cap))
+
+
+def retry_call(policy: RetryPolicy, fn: Callable, *args,
+               op: str = "op", rng: Optional[random.Random] = None,
+               on_retry: Optional[Callable[[int, BaseException], None]] = None,
+               on_give_up: Optional[Callable[[BaseException], None]] = None,
+               **kwargs):
+    """Run ``fn(*args, **kwargs)`` under ``policy``.
+
+    Re-raises the *original* exception on a non-retryable error or an
+    exhausted budget (attempts or deadline) — callers never see a wrapper
+    type, so existing error handling keeps working.
+    """
+    rng = rng if rng is not None else random
+    deadline = (None if policy.deadline_s is None
+                else time.monotonic() + policy.deadline_s)
+    attempt = 0
+    while True:
+        try:
+            return fn(*args, **kwargs)
+        except BaseException as e:
+            if not policy.retryable(e):
+                raise
+            attempt += 1
+            exhausted = attempt >= policy.max_attempts or (
+                deadline is not None and time.monotonic() >= deadline)
+            if exhausted:
+                if on_give_up is not None:
+                    on_give_up(e)
+                metrics.inc("storage.gave_up", 1, op=op)
+                raise
+            if on_retry is not None:
+                on_retry(attempt, e)
+            metrics.inc("storage.retries", 1, op=op)
+            delay = policy.backoff_s(attempt - 1, rng)
+            if deadline is not None:
+                delay = min(delay, max(0.0, deadline - time.monotonic()))
+            if delay > 0:
+                time.sleep(delay)
+
+
+class RetryingStorage(Storage):
+    """Transparent :class:`Storage` wrapper applying a :class:`RetryPolicy`.
+
+    Data ops (``read_file``/``read_range``/``write_file``/``append_file``/
+    ``write_range``/``fsync_dir``) are retried; namespace ops (``listdir``,
+    ``exists``, ``rename``, ...) pass straight through — they are metadata,
+    and the commit protocol's rename must stay single-shot atomic.
+    """
+
+    def __init__(self, inner: Storage, policy: Optional[RetryPolicy] = None,
+                 *, retry_writes: bool = True, seed: Optional[int] = None):
+        self.inner = inner
+        self.policy = policy if policy is not None else RetryPolicy()
+        self.retry_writes = retry_writes
+        self.name = f"retry({getattr(inner, 'name', '?')})"
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+        self.retries = 0    # attribute mirrors of the live counters, for
+        self.gave_up = 0    # tests/benchmarks with metrics disabled
+        self.give_up_log: List[tuple] = []  # (op, repr(exc)) per give-up
+
+    def _call(self, op: str, fn: Callable, *args, **kwargs):
+        def _note_retry(_attempt: int, _exc: BaseException) -> None:
+            with self._lock:
+                self.retries += 1
+
+        def _note_give_up(exc: BaseException) -> None:
+            with self._lock:
+                self.gave_up += 1
+                self.give_up_log.append((op, repr(exc)))
+
+        return retry_call(self.policy, fn, *args, op=op, rng=self._rng,
+                          on_retry=_note_retry, on_give_up=_note_give_up,
+                          **kwargs)
+
+    # -- retried data ops ------------------------------------------------------
+    def read_file(self, path: str) -> bytes:
+        return self._call("read_file", self.inner.read_file, path)
+
+    def read_range(self, path: str, offset: int, length: int) -> bytes:
+        return self._call("read_range", self.inner.read_range,
+                          path, offset, length)
+
+    def write_file(self, path: str, data: bytes, sync: bool = False) -> None:
+        if not self.retry_writes:
+            return self.inner.write_file(path, data, sync=sync)
+        return self._call("write_file", self.inner.write_file,
+                          path, data, sync=sync)
+
+    def append_file(self, path: str, data: bytes, sync: bool = False) -> None:
+        if not self.retry_writes:
+            return self.inner.append_file(path, data, sync=sync)
+        return self._call("append_file", self.inner.append_file,
+                          path, data, sync=sync)
+
+    def write_range(self, path: str, offset: int, data: bytes,
+                    sync: bool = False) -> None:
+        if not self.retry_writes:
+            return self.inner.write_range(path, offset, data, sync=sync)
+        return self._call("write_range", self.inner.write_range,
+                          path, offset, data, sync=sync)
+
+    def fsync_dir(self, path: str) -> None:
+        return self._call("fsync_dir", self.inner.fsync_dir, path)
+
+    # -- passthrough namespace -------------------------------------------------
+    def listdir(self, path: str) -> List[str]:
+        return self.inner.listdir(path)
+
+    def exists(self, path: str) -> bool:
+        return self.inner.exists(path)
+
+    def makedirs(self, path: str) -> None:
+        self.inner.makedirs(path)
+
+    def remove(self, path: str) -> None:
+        self.inner.remove(path)
+
+    def rename(self, src: str, dst: str) -> None:
+        self.inner.rename(src, dst)
+
+    def size(self, path: str) -> int:
+        return self.inner.size(path)
+
+    def drop_caches(self) -> None:
+        self.inner.drop_caches()

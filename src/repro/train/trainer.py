@@ -66,13 +66,23 @@ class Trainer:
         self.history: List[Dict] = []
         self._stop_requested = False
         self._pending_saves: List[Any] = []  # AsyncSaveHandle-like objects
+        self.recovered_step: Optional[int] = None
         if install_sigterm:
             signal.signal(signal.SIGTERM, self._handle_sigterm)
         if resume and checkpointer is not None:
-            latest = checkpointer.latest_step()
-            if latest is not None:
-                self.state = checkpointer.restore_pytree(self.state)
-                # step counter lives in the state itself
+            if hasattr(checkpointer, "resume"):
+                # CheckpointManager path: params AND input-pipeline position
+                # (walks back past corrupt checkpoints; repositions a
+                # ResumableIterator so no sample is skipped or replayed)
+                res = checkpointer.resume(self.state, data_iter=self.data_iter)
+                self.state = res.state
+                self.recovered_step = res.step
+            else:
+                latest = checkpointer.latest_step()
+                if latest is not None:
+                    self.state = checkpointer.restore_pytree(self.state)
+                    self.recovered_step = latest
+                    # step counter lives in the state itself
 
     def _handle_sigterm(self, signum, frame):  # pragma: no cover
         self._stop_requested = True
@@ -142,7 +152,14 @@ class Trainer:
         blocked time."""
         self._reap_saves()
         t3 = time.monotonic()
-        result = self.checkpointer.save(step, self.state)
+        extra = None
+        state_fn = getattr(self.data_iter, "state", None)
+        if callable(state_fn):
+            # iterator checkpoint rides along in the meta (tf.data-style),
+            # captured on the training thread so it is consistent with the
+            # params being saved even under an async engine
+            extra = {"pipeline": state_fn()}
+        result = self.checkpointer.save(step, self.state, extra_meta=extra)
         self.timer.checkpoint_s.append(time.monotonic() - t3)
         if hasattr(result, "done") and hasattr(result, "exception"):
             self._pending_saves.append(result)
@@ -188,6 +205,7 @@ class Trainer:
         data_frac = s["data_wait"]["total"] / (s["data_wait"]["total"] + compute)
         return dict(
             steps=len(self.timer.compute_s),
+            recovered_step=self.recovered_step,
             data_wait_frac=data_frac,
             straggler_suspect=data_frac > self.straggler_threshold,
             timer=s,

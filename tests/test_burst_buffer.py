@@ -95,3 +95,26 @@ class TestDirect:
         np.testing.assert_array_equal(out["w"], t["w"])
         d.wait()  # no-op
         d.close()
+
+    def test_close_discipline_matches_async_engines(self, tmp_storage):
+        """PR-7 handle/close parity: close() is idempotent, save() after
+        close() raises, and a save failure is delivered exactly once
+        (inline) — never again via wait()/close()."""
+        import pytest
+
+        from repro.core.faults import FaultInjected, FaultyStorage
+
+        faulty = FaultyStorage(tmp_storage)
+        d = DirectCheckpointer(faulty, "ckpt/m")
+        t = big_tree(1)
+        d.save(1, t)
+        faulty.fail_after(0)
+        with pytest.raises(FaultInjected):  # delivered inline, once
+            d.save(2, t)
+        faulty.heal()
+        d.wait()    # must NOT re-raise the already-delivered error
+        d.close()   # likewise
+        d.close()   # idempotent
+        with pytest.raises(RuntimeError):
+            d.save(3, t)
+        assert d.latest_step() == 1  # failed save never committed

@@ -1,0 +1,244 @@
+"""RetryPolicy / RetryingStorage: transient faults absorbed below every
+consumer, sticky faults and semantic errors still surfaced unchanged."""
+import time
+
+import pytest
+
+from repro.core.faults import FaultInjected, FaultyStorage, TransientFault
+from repro.core.retry import (RetryPolicy, RetryingStorage, default_classifier,
+                              retry_call)
+
+FAST = RetryPolicy(max_attempts=5, base_delay_s=1e-5, max_delay_s=1e-4)
+
+
+class TestTransientFaultModel:
+    """The new non-sticky FaultyStorage mode itself."""
+
+    def test_burst_then_device_recovers(self, tmp_storage):
+        tmp_storage.write_file("a", b"payload")
+        f = FaultyStorage(tmp_storage).transient(n_ops=2, ops=("read",))
+        with pytest.raises(TransientFault):
+            f.read_file("a")
+        with pytest.raises(TransientFault):
+            f.read_file("a")
+        assert f.read_file("a") == b"payload"  # non-sticky: alive again
+        assert f.transients_injected == 2
+
+    def test_fires_before_op_so_no_bytes_land(self, tmp_storage):
+        f = FaultyStorage(tmp_storage).transient(n_ops=1, ops=("write",))
+        with pytest.raises(TransientFault):
+            f.write_file("x", b"data")
+        assert not tmp_storage.exists("x")
+        f.write_file("x", b"data")  # retry of the same call succeeds
+        assert tmp_storage.read_file("x") == b"data"
+
+    def test_rate_is_seeded_and_reproducible(self, tmp_storage):
+        tmp_storage.write_file("a", b"p")
+
+        def run(seed):
+            f = FaultyStorage(tmp_storage).transient(
+                rate=0.3, ops=("read",), seed=seed)
+            hits = []
+            for _ in range(50):
+                try:
+                    f.read_file("a")
+                    hits.append(0)
+                except TransientFault:
+                    hits.append(1)
+            return hits
+
+        assert run(7) == run(7)
+        assert sum(run(7)) > 0
+        assert run(7) != run(8)
+
+    def test_path_filter(self, tmp_storage):
+        tmp_storage.write_file("data/shard-0", b"x")
+        tmp_storage.write_file("other", b"y")
+        f = FaultyStorage(tmp_storage).transient(
+            n_ops=10, on="shard", ops=("read",))
+        assert f.read_file("other") == b"y"  # non-matching path untouched
+        with pytest.raises(TransientFault):
+            f.read_file("data/shard-0")
+
+    def test_heal_clears_transient_arming(self, tmp_storage):
+        tmp_storage.write_file("a", b"p")
+        f = FaultyStorage(tmp_storage).transient(n_ops=100, ops=("read",))
+        f.heal()
+        assert f.read_file("a") == b"p"
+
+    def test_independent_of_sticky_arming(self, tmp_storage):
+        """Transient reads + sticky writes can be armed together."""
+        tmp_storage.write_file("a", b"p")
+        f = FaultyStorage(tmp_storage)
+        f.transient(n_ops=1, ops=("read",)).fail_after(1, ops=("write",))
+        with pytest.raises(TransientFault):
+            f.read_file("a")
+        assert f.read_file("a") == b"p"
+        f.write_file("w", b"1")
+        with pytest.raises(FaultInjected):
+            f.write_file("x", b"2")
+
+    def test_invalid_rate_rejected(self, tmp_storage):
+        with pytest.raises(ValueError):
+            FaultyStorage(tmp_storage).transient(rate=1.5)
+
+
+class TestRetryPolicy:
+    def test_backoff_is_bounded_full_jitter(self):
+        import random
+
+        p = RetryPolicy(base_delay_s=0.01, max_delay_s=0.05)
+        rng = random.Random(0)
+        for i in range(10):
+            d = p.backoff_s(i, rng)
+            assert 0.0 <= d <= min(0.05, 0.01 * 2 ** i)
+
+    def test_classifier_retries_io_not_semantic_errors(self):
+        assert default_classifier(OSError("flaky"))
+        assert default_classifier(TimeoutError())
+        assert default_classifier(TransientFault("x"))
+        assert not default_classifier(FileNotFoundError("gone"))
+        assert not default_classifier(PermissionError("denied"))
+        assert not default_classifier(ValueError("bug"))
+        assert not default_classifier(KeyError("bug"))
+
+    def test_max_attempts_validated(self):
+        with pytest.raises(ValueError):
+            RetryPolicy(max_attempts=0)
+
+    def test_retry_call_succeeds_within_budget(self):
+        calls = []
+
+        def flaky():
+            calls.append(1)
+            if len(calls) < 3:
+                raise OSError("transient")
+            return "ok"
+
+        assert retry_call(FAST, flaky) == "ok"
+        assert len(calls) == 3
+
+    def test_retry_call_reraises_original_on_exhaustion(self):
+        err = OSError("always")
+
+        def dead():
+            raise err
+
+        with pytest.raises(OSError) as ei:
+            retry_call(RetryPolicy(max_attempts=3, base_delay_s=1e-5), dead)
+        assert ei.value is err  # the original, not a wrapper
+
+    def test_non_retryable_raises_immediately(self):
+        calls = []
+
+        def bad():
+            calls.append(1)
+            raise FileNotFoundError("gone")
+
+        with pytest.raises(FileNotFoundError):
+            retry_call(FAST, bad)
+        assert len(calls) == 1
+
+    def test_deadline_cuts_retries_short(self):
+        p = RetryPolicy(max_attempts=1000, base_delay_s=0.02,
+                        max_delay_s=0.02, deadline_s=0.05)
+        calls = []
+
+        def dead():
+            calls.append(1)
+            raise OSError("down")
+
+        t0 = time.monotonic()
+        with pytest.raises(OSError):
+            retry_call(p, dead)
+        assert time.monotonic() - t0 < 2.0
+        assert len(calls) < 1000
+
+
+class TestRetryingStorage:
+    def test_transparent_read_retry_and_counters(self, tmp_storage):
+        tmp_storage.write_file("a", b"payload")
+        f = FaultyStorage(tmp_storage).transient(n_ops=3, ops=("read",))
+        rs = RetryingStorage(f, FAST)
+        assert rs.read_file("a") == b"payload"
+        assert rs.retries == 3
+        assert rs.gave_up == 0
+        assert f.transients_injected == 3
+
+    def test_write_and_range_ops_retry(self, tmp_storage):
+        f = FaultyStorage(tmp_storage).transient(
+            n_ops=2, ops=("write", "append"))
+        rs = RetryingStorage(f, FAST)
+        rs.write_file("x", b"0123456789")
+        assert tmp_storage.read_file("x") == b"0123456789"
+        f.transient(n_ops=1, ops=("write",))
+        rs.write_range("x", 2, b"AB")
+        assert tmp_storage.read_file("x") == b"01AB456789"
+        f.transient(n_ops=1, ops=("read",))
+        assert rs.read_range("x", 0, 4) == b"01AB"
+
+    def test_sticky_fault_exhausts_budget_and_reraises(self, tmp_storage):
+        tmp_storage.write_file("a", b"p")
+        f = FaultyStorage(tmp_storage).fail_after(0, ops=("read",))
+        rs = RetryingStorage(f, RetryPolicy(max_attempts=3, base_delay_s=1e-5))
+        with pytest.raises(FaultInjected):  # the original error type
+            rs.read_file("a")
+        assert rs.retries == 2        # attempts 2 and 3 were retries
+        assert rs.gave_up == 1
+        assert rs.give_up_log[0][0] == "read_file"
+
+    def test_burst_longer_than_budget_gives_up(self, tmp_storage):
+        tmp_storage.write_file("a", b"p")
+        f = FaultyStorage(tmp_storage).transient(n_ops=10, ops=("read",))
+        rs = RetryingStorage(f, RetryPolicy(max_attempts=3, base_delay_s=1e-5))
+        with pytest.raises(TransientFault):
+            rs.read_file("a")
+        assert rs.gave_up == 1
+
+    def test_missing_file_not_retried(self, tmp_storage):
+        rs = RetryingStorage(tmp_storage, FAST)
+        with pytest.raises(FileNotFoundError):
+            rs.read_file("nope")
+        assert rs.retries == 0  # semantic error: no budget burned
+
+    def test_retry_writes_false_passes_through(self, tmp_storage):
+        f = FaultyStorage(tmp_storage).transient(n_ops=1, ops=("write",))
+        rs = RetryingStorage(f, FAST, retry_writes=False)
+        with pytest.raises(TransientFault):
+            rs.write_file("x", b"1")
+        rs.write_file("x", b"1")  # device recovered; reads still retried
+
+    def test_namespace_ops_delegate(self, tmp_storage):
+        rs = RetryingStorage(tmp_storage, FAST)
+        rs.makedirs("d")
+        rs.write_file("d/a", b"1")
+        assert rs.exists("d/a")
+        assert "a" in rs.listdir("d")
+        assert rs.size("d/a") == 1
+        rs.rename("d/a", "d/b")
+        assert rs.read_file("d/b") == b"1"
+        rs.remove("d/b")
+        assert not rs.exists("d/b")
+        assert rs.name == f"retry({tmp_storage.name})"
+
+    def test_counters_flow_to_live_metrics(self, tmp_storage):
+        from repro import metrics
+
+        tmp_storage.write_file("a", b"p")
+        reg = metrics.start()
+        try:
+            f = FaultyStorage(tmp_storage).transient(n_ops=2, ops=("read",))
+            rs = RetryingStorage(f, FAST)
+            rs.read_file("a")
+            f.fail_after(0, ops=("read",))
+            with pytest.raises(FaultInjected):
+                rs.read_file("a")
+            counters = reg.collect()["counters"]
+            retries = sum(v for k, v in counters.items()
+                          if k.startswith("storage.retries"))
+            gave_up = sum(v for k, v in counters.items()
+                          if k.startswith("storage.gave_up"))
+            assert retries >= 2
+            assert gave_up == 1
+        finally:
+            metrics.stop()
