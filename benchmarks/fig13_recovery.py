@@ -54,9 +54,22 @@ from .common import RESULTS_DIR, SCRATCH, emit
 
 TIERS = ("hdd", "ssd", "optane", "lustre")
 FAULT_RATE = float(os.environ.get("REPRO_FAULT_RATE", "0.01"))
-#: Tight backoff: the benchmark's retry cost should be the simulated
-#: re-read, not real sleep time.
-POLICY = RetryPolicy(max_attempts=5, base_delay_s=1e-4, max_delay_s=1e-3)
+#: Realistic flaky-device backoff (1 ms base, 10 ms cap) — affordable here
+#: because the sleep runs on the simulator's paced clock, not wall time.
+RETRY_ATTEMPTS = 5
+RETRY_BASE_S = 1e-3
+RETRY_MAX_S = 1e-2
+
+
+def make_policy(sim) -> RetryPolicy:
+    """Retry policy whose backoff runs on ``sim``'s scaled clock.
+
+    ``sleep=sim.paced_sleep`` puts the jittered backoff on the same
+    ``time_scale`` as the modelled device, so the faulty-path latency tax
+    (re-read + backoff) reproduces exactly at any simulation speed instead
+    of the backoff staying real-time while the device accelerates."""
+    return RetryPolicy(max_attempts=RETRY_ATTEMPTS, base_delay_s=RETRY_BASE_S,
+                       max_delay_s=RETRY_MAX_S, sleep=sim.paced_sleep)
 
 
 def write_corpus(storage, n_shards: int, recs_per_shard: int,
@@ -157,18 +170,19 @@ def measure_recovery(storage, paths, rec_bytes: int, state_mb: float,
 
 def run(n_shards=16, recs_per_shard=32, rec_bytes=64 * 1024,
         state_mb=4.0, keep_last=3, n_saves=5, fault_rate=FAULT_RATE,
-        n_passes=2, smoke=False, name="fig13_recovery",
+        n_passes=2, time_scale=1.0, smoke=False, name="fig13_recovery",
         json_path=None) -> dict:
     rows = []
     tiers_out = {}
     with tempfile.TemporaryDirectory(dir=SCRATCH) as root:
         for tier in TIERS:
-            sim = make_storage(tier, os.path.join(root, tier))
+            sim = make_storage(tier, os.path.join(root, tier),
+                               time_scale=time_scale)
             paths = write_corpus(sim, n_shards, recs_per_shard, rec_bytes)
 
             faulty = FaultyStorage(sim).transient(
                 rate=fault_rate, ops=("read",), seed=32)
-            rs = RetryingStorage(faulty, POLICY)
+            rs = RetryingStorage(faulty, make_policy(sim))
             reg = metrics.start()
             try:
                 # metrics stay on for both passes so the comparison is
@@ -223,8 +237,11 @@ def run(n_shards=16, recs_per_shard=32, rec_bytes=64 * 1024,
             "rec_bytes": rec_bytes, "state_mb": state_mb,
             "keep_last": keep_last, "n_saves": n_saves,
             "fault_rate": fault_rate, "n_passes": n_passes,
-            "retry": {"max_attempts": POLICY.max_attempts,
-                      "base_delay_s": POLICY.base_delay_s},
+            "time_scale": time_scale,
+            "retry": {"max_attempts": RETRY_ATTEMPTS,
+                      "base_delay_s": RETRY_BASE_S,
+                      "max_delay_s": RETRY_MAX_S,
+                      "paced_sleep": True},
             "tiers": list(TIERS),
         },
         "tiers": tiers_out,

@@ -1,14 +1,30 @@
 """Fig. 6 analogue: AlexNet mini-app runtime, prefetch on/off x threads x tier.
 
 The paper's central claim: with prefetch(1), runtime becomes independent of
-threads/tier (input pipeline fully hidden behind per-batch compute)."""
+threads/tier (input pipeline fully hidden behind per-batch compute).
+
+Emits the usual CSV rows plus machine-readable ``BENCH_prefetch.json``:
+per tier x thread-count an ``overlap_gain`` leaf (no-prefetch runtime /
+prefetch runtime — how much wall clock prefetch overlap wins back, gated
+by the regression gate's ``overlap`` family) and the cross-config
+``overlap_excess_hdd1`` (hdd single-thread no-prefetch excess, the paper's
+headline worst case).
+
+    PYTHONPATH=src python -m benchmarks.fig6_prefetch [--smoke]
+"""
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 
+sys.path.insert(0, "src")
+
+from repro.configs.alexnet_mini import SMOKE as ACFG_SMOKE
 from repro.configs.alexnet_mini import AlexNetConfig
 
 # heavier FC stack: per-batch compute ~0.3 s, comfortably above per-batch
@@ -18,25 +34,25 @@ ACFG = AlexNetConfig(name="alexnet-fig6", in_hw=128,
 from repro.core.dataset import image_pipeline
 from repro.models import alexnet as A
 
-from .common import BenchEnv, emit
+from .common import RESULTS_DIR, BenchEnv, emit
 
 
-def make_train_step():
+def make_train_step(acfg):
     @jax.jit
     def step(params, imgs, labels):
         loss, g = jax.value_and_grad(
-            lambda p: A.loss_fn(p, imgs, labels, ACFG))(params)
+            lambda p: A.loss_fn(p, imgs, labels, acfg))(params)
         new_p = jax.tree.map(lambda p, gg: p - 1e-4 * gg, params, g)
         return new_p, loss
 
     return step
 
 
-def run_epoch(st, paths, labels, *, threads, prefetch, step, params,
+def run_epoch(st, paths, labels, *, threads, prefetch, step, params, acfg,
               batch=16, n_batches=6):
     ds = image_pipeline(
         st, paths, labels, batch_size=batch, num_parallel_calls=threads,
-        prefetch=prefetch, out_hw=(ACFG.in_hw, ACFG.in_hw), seed=0,
+        prefetch=prefetch, out_hw=(acfg.in_hw, acfg.in_hw), seed=0,
         repeat=True)
     it = iter(ds)
     # warmup compile outside the timed region
@@ -50,34 +66,78 @@ def run_epoch(st, paths, labels, *, threads, prefetch, step, params,
     return time.monotonic() - t0
 
 
-def run() -> None:
+def run(tiers=("hdd", "ssd", "optane"), n_images=160, mean_hw=(64, 64),
+        thread_counts=(1, 4), batch=16, n_batches=6, acfg=ACFG,
+        name="fig6_prefetch", json_path=None) -> dict:
     # Caltech-101-like corpus: median ~12 KB images, unscaled tier model
-    env = BenchEnv(tiers=("hdd", "ssd", "optane"), n_images=160,
-                   mean_hw=(64, 64), time_scale=1.0)
-    step = make_train_step()
-    params = A.init_params(jax.random.PRNGKey(0), ACFG)
+    env = BenchEnv(tiers=tiers, n_images=n_images, mean_hw=mean_hw,
+                   time_scale=1.0)
+    step = make_train_step(acfg)
+    params = A.init_params(jax.random.PRNGKey(0), acfg)
     rows = []
     times = {}
-    for tier in ("hdd", "ssd", "optane"):
+    result: dict = {}
+    for tier in tiers:
         st = env.storages[tier]
         paths, labels = env.corpora[tier]
-        for threads in (1, 4):
+        result[tier] = {}
+        for threads in thread_counts:
+            per = {}
             for pf in (0, 1):
                 t = run_epoch(st, paths, labels, threads=threads,
-                              prefetch=pf, step=step, params=params)
+                              prefetch=pf, step=step, params=params,
+                              acfg=acfg, batch=batch, n_batches=n_batches)
                 times[(tier, threads, pf)] = t
+                per[f"prefetch{pf}_s"] = round(t, 3)
                 rows.append(f"{tier},threads={threads},prefetch={pf},"
                             f"runtime_s={t:.2f}")
+            per["overlap_gain"] = round(
+                per["prefetch0_s"] / max(per["prefetch1_s"], 1e-9), 3)
+            result[tier][str(threads)] = per
+    env.close()
+
     # prefetch-hides-io check: spread of prefetch=1 runtimes across configs
     pf1 = [v for k, v in times.items() if k[2] == 1]
     spread = (max(pf1) - min(pf1)) / max(min(pf1), 1e-9)
-    excess = times[("hdd", 1, 0)] / times[("hdd", 1, 1)]
-    emit("fig6_prefetch", rows,
+    t0 = thread_counts[0]
+    excess = (times[(tiers[0], t0, 0)] / times[(tiers[0], t0, 1)])
+    emit(name, rows,
          f"prefetch=1 runtime spread across tiers/threads={spread:.2%} "
-         f"(paper: ~0 — I/O fully hidden); hdd 1-thread no-prefetch excess="
-         f"{excess:.2f}x")
-    env.close()
+         f"(paper: ~0 — I/O fully hidden); {tiers[0]} {t0}-thread "
+         f"no-prefetch excess={excess:.2f}x")
+
+    payload = {
+        "benchmark": name,
+        "config": {
+            "tiers": list(tiers), "n_images": n_images,
+            "mean_hw": list(mean_hw), "thread_counts": list(thread_counts),
+            "batch": batch, "n_batches": n_batches,
+            "model": {"name": acfg.name, "in_hw": acfg.in_hw,
+                      "filters": list(acfg.filters), "fc": list(acfg.fc)},
+        },
+        "tiers": result,
+        "overlap_excess_hdd1": round(excess, 3),
+        "prefetch_spread": round(spread, 4),
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out_json = json_path or os.path.join(RESULTS_DIR, "BENCH_prefetch.json")
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {out_json}")
+    return payload
+
+
+def run_smoke() -> dict:
+    """Tiny-scale CI variant: toy model, two tiers, seconds of runtime."""
+    return run(tiers=("hdd", "ssd"), n_images=48, mean_hw=(48, 48),
+               thread_counts=(1, 4), batch=8, n_batches=4, acfg=ACFG_SMOKE)
 
 
 if __name__ == "__main__":
-    run()
+    payload = run_smoke() if "--smoke" in sys.argv else run()
+    # the paper regime: hiding I/O behind compute must win on the slowest
+    # tier's serial config; a gain below 1 means prefetch actively hurt
+    ok = payload["overlap_excess_hdd1"] >= 1.0
+    print(f"# overlap_excess_hdd1={payload['overlap_excess_hdd1']}x ok={ok}")
+    if not ok:
+        sys.exit(1)

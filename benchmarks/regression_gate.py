@@ -43,10 +43,14 @@ REPORTS_DIR = os.environ.get("REPRO_BENCH_DIR", "reports")
 # (fig12) is a ratio in [0, 1] — fraction of direct-checkpoint blocked
 # time the async burst buffer eliminates — so "higher is better" holds,
 # and likewise goodput_frac (fig13: faulty/clean throughput under the
-# retry layer; recover_s is lower-is-better and deliberately ungated).
+# retry layer; recover_s is lower-is-better and deliberately ungated),
+# warm_speedup (fig14: warm-epoch / cold-epoch throughput through the
+# block cache), and the overlap family (fig6: prefetch overlap gains —
+# matched by prefix, covering overlap_gain / overlap_excess variants).
 GATED_LEAVES = ("samples_per_s", "bytes_per_s", "speedup",
                 "speedup_sharded_vs_legacy", "steps_per_s",
-                "blocked_frac_saved", "goodput_frac")
+                "blocked_frac_saved", "goodput_frac", "warm_speedup")
+GATED_LEAF_PREFIXES = ("overlap",)
 
 DEFAULT_TOLERANCE = 0.25
 SMOKE_TOLERANCE = 0.50   # tiny sweeps on shared CI boxes are noisy
@@ -64,8 +68,12 @@ def flatten(obj, prefix: str = "") -> Dict[str, float]:
 
 
 def gated_leaves(payload: dict) -> Dict[str, float]:
-    return {path: v for path, v in flatten(payload).items()
-            if path.split(".")[-1] in GATED_LEAVES}
+    def gated(path: str) -> bool:
+        leaf = path.split(".")[-1]
+        return (leaf in GATED_LEAVES
+                or leaf.startswith(GATED_LEAF_PREFIXES))
+
+    return {path: v for path, v in flatten(payload).items() if gated(path)}
 
 
 def compare(baseline: dict, new: dict, tolerance: float,

@@ -26,9 +26,14 @@
   (sticky failures, torn writes, reordered fsync + crash, and non-sticky
   transients), the crash-consistency proof harness for all of the above.
 * :mod:`repro.core.retry` — :class:`RetryPolicy` (exponential backoff +
-  full jitter + deadline) and the transparent :class:`RetryingStorage`
-  wrapper that absorbs transient storage faults below every pipeline and
-  checkpoint path.
+  full jitter + deadline, injectable ``sleep``) and the transparent
+  :class:`RetryingStorage` wrapper that absorbs transient storage faults
+  below every pipeline and checkpoint path.
+* :mod:`repro.core.cache` — tiered block read-cache: :class:`BlockCache`
+  (byte-budget LRU + single-flight dedup + optional fast-tier spill),
+  the transparent :class:`CachingStorage` wrapper, and the
+  :class:`ReadaheadScheduler` that prefetches upcoming shards' blocks
+  ahead of the interleave cursor.
 * :mod:`repro.core.recovery` — :class:`CheckpointManager`: retention
   (keep-last-k + keep-every-n), corruption-aware ``latest_valid()``
   restore, crash-safe GC, and TrainState-level ``resume()`` that also
@@ -45,8 +50,9 @@ tf-Darshan-style subsystem.  Tracing is off by default; call
 ``repro.trace.dump_chrome_trace`` (Perfetto) or summarize with
 ``repro.trace.to_markdown``.
 """
-from .dataset import (Dataset, ResumableIterator, image_pipeline,
-                      sharded_image_pipeline)
+from .cache import BlockCache, CachingStorage, ReadaheadScheduler
+from .dataset import (Dataset, ResumableIterator, ShardQuarantine,
+                      image_pipeline, sharded_image_pipeline)
 from .prefetcher import PrefetchIterator, prefetch_to_device
 from .readerpool import ReaderPool, reader_pool
 from .storage import Storage, NativeStorage, SimulatedStorage, TIERS, make_storage
@@ -61,8 +67,9 @@ from .recovery import CheckpointManager, ResumeResult, latest_valid_step, \
 from .stats import IOTracer, StepTimer
 
 __all__ = [
-    "Dataset", "ResumableIterator", "image_pipeline",
+    "Dataset", "ResumableIterator", "ShardQuarantine", "image_pipeline",
     "sharded_image_pipeline",
+    "BlockCache", "CachingStorage", "ReadaheadScheduler",
     "PrefetchIterator", "prefetch_to_device", "ReaderPool", "reader_pool",
     "Storage", "NativeStorage", "SimulatedStorage", "TIERS", "make_storage",
     "CheckpointSaver", "AsyncCheckpointer", "AsyncSaveHandle",

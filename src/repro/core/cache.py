@@ -1,0 +1,635 @@
+"""Tiered block read-cache + readahead for the storage stack (paper §III-A).
+
+The paper's repeated-epoch characterization (Fig. 5) hinges on whether reads
+are served warm from memory or cold from the device, and tf-Darshan
+(arXiv:2008.04395) attributes most per-op DL read time to exactly those
+small cold POSIX reads.  The interleave engine re-reads every shard every
+epoch, so without a cache the hdd/lustre tiers never leave the cold-read
+regime.  This module adds the missing memory-hierarchy level:
+
+* :class:`BlockCache` — an LRU over ``(path, block_index)`` keys with a
+  **hard byte budget**.  Blocks are immutable ``bytes`` objects, so a hit
+  is served zero-copy (the cached object itself, or a ``memoryview`` slice
+  for sub-block ranges).  Concurrent readers of the same *missing* block
+  share one in-flight future (**single-flight dedup**) instead of issuing
+  duplicate storage reads — under a 16-way racing cold epoch the device
+  sees each block exactly once.  An optional **spill tier** evicts DRAM
+  blocks to a fast storage (the burst buffer's read-side analogue of
+  §III-C): eviction writes the block into a slot of one spill arena file
+  (``write_range``), and a later miss probes the arena (``read_range``)
+  before falling back to the slow tier — a DRAM → fast → slow hierarchy.
+* :class:`CachingStorage` — a transparent :class:`Storage` wrapper (same
+  shape as :class:`~repro.core.retry.RetryingStorage`) that serves
+  ``read_file``/``read_range`` through the cache block-by-block and
+  invalidates on every mutation (write/append/write_range/rename/remove).
+  It composes *under* ``RetryingStorage`` (a loader failure drops the
+  flight, so the retry above re-drives the cache) and *over*
+  ``FaultyStorage``/``SimulatedStorage``/``NativeStorage``.
+* :class:`ReadaheadScheduler` — walks the shard stream ahead of the
+  interleave cursor (``sharded_image_pipeline(readahead=...)`` buffers a
+  few upcoming shard paths) and prefetches their blocks onto the shared
+  :class:`~repro.core.readerpool.ReaderPool` under a **window cap** — the
+  same in-flight discipline every pipeline stage uses, so readahead never
+  inflates a sweep's concurrency.  Prefetch loads share the cache's
+  single-flight futures with foreground reads: a consumer arriving at a
+  block being prefetched waits on that future instead of re-reading.
+
+Consistency model: the cache assumes it sits on the *only* mutation path —
+writes through :class:`CachingStorage` invalidate precisely; writes that
+bypass it (another process, the inner storage handle) are invisible, like
+an OS page cache without coherence traffic.  Invalidation is generation-
+based: a write bumps the path's generation, and an in-flight load started
+before the write refuses to publish its (possibly stale) block.
+
+Observability (house style — one ``metrics.enabled()`` check per op, no
+allocation when disabled): ``cache.{hits,misses,evictions,spills,
+spill_hits,single_flight_waits,readahead_blocks}`` counters,
+``cache.{hit_bytes,miss_bytes,spilled_bytes}`` byte counters, polled
+``cache.{occupancy_bytes,hit_ratio,spill_occupancy_bytes}`` gauges
+(unregistered on :meth:`BlockCache.close`, like ``ReaderPool``), a
+``cache.lookup_s`` latency sketch, and ``cache``-stage trace spans on every
+miss fill / spill read / spill write.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from collections import OrderedDict, deque
+from concurrent.futures import Future
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .. import metrics, trace
+from .readerpool import reader_pool
+from .storage import Storage
+
+_counter = itertools.count()
+
+
+class BlockCache:
+    """Byte-budgeted LRU of file blocks with single-flight miss loading.
+
+    ``capacity_bytes`` is a hard ceiling on DRAM occupancy — eviction runs
+    before a new block is published, never after.  A block larger than the
+    whole budget is served but not cached.  With ``spill_storage`` set,
+    evicted blocks land in fixed-size slots of one arena file on that
+    (fast) tier, bounded by ``spill_capacity_bytes`` (default ``4x`` the
+    DRAM budget) with its own LRU slot reuse.
+    """
+
+    def __init__(self, capacity_bytes: int, *, block_size: int = 1 << 20,
+                 spill_storage: Optional[Storage] = None,
+                 spill_capacity_bytes: Optional[int] = None,
+                 spill_path: str = "cache/spill.arena",
+                 name: Optional[str] = None):
+        if capacity_bytes <= 0:
+            raise ValueError(f"capacity_bytes must be > 0, got {capacity_bytes}")
+        if block_size <= 0:
+            raise ValueError(f"block_size must be > 0, got {block_size}")
+        self.capacity = int(capacity_bytes)
+        self.block_size = int(block_size)
+        self.name = name or f"cache-{next(_counter)}"
+        self._lock = threading.Lock()
+        self._blocks: "OrderedDict[Tuple[str, int], bytes]" = OrderedDict()
+        self._bytes = 0
+        self._inflight: Dict[Tuple[str, int], Future] = {}
+        self._gen: Dict[str, int] = {}  # path -> write generation
+        self._closed = False
+        # spill tier (optional): one arena file of block_size-wide slots
+        self._spill = spill_storage
+        self._spill_cap = int(spill_capacity_bytes
+                              if spill_capacity_bytes is not None
+                              else 4 * self.capacity)
+        self._spill_path = spill_path
+        self._spill_index: "OrderedDict[Tuple[str, int], Tuple[int, int]]" = \
+            OrderedDict()               # key -> (slot, length)
+        self._spill_bytes = 0
+        self._free_slots: List[int] = []
+        self._next_slot = 0
+        self._pins: Dict[int, int] = {}  # slot -> readers/writers mid-I/O
+        # attribute mirrors of the live counters (metrics-disabled runs)
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.spills = 0
+        self.spill_hits = 0
+        self.single_flight_waits = 0
+        self.hit_bytes = 0
+        self.miss_bytes = 0
+        metrics.register_gauge("cache.occupancy_bytes",
+                               lambda: self._bytes, cache=self.name)
+        metrics.register_gauge("cache.hit_ratio", self.hit_ratio,
+                               cache=self.name)
+        if self._spill is not None:
+            metrics.register_gauge("cache.spill_occupancy_bytes",
+                                   lambda: self._spill_bytes, cache=self.name)
+
+    # -- introspection -------------------------------------------------------
+    def hit_ratio(self) -> float:
+        lookups = self.hits + self.misses
+        return self.hits / lookups if lookups else 0.0
+
+    @property
+    def occupancy_bytes(self) -> int:
+        return self._bytes
+
+    @property
+    def spill_occupancy_bytes(self) -> int:
+        return self._spill_bytes
+
+    def stats(self) -> dict:
+        """Point snapshot of the counters (for benchmarks/tests)."""
+        with self._lock:
+            return dict(
+                hits=self.hits, misses=self.misses,
+                evictions=self.evictions, spills=self.spills,
+                spill_hits=self.spill_hits,
+                single_flight_waits=self.single_flight_waits,
+                hit_bytes=self.hit_bytes, miss_bytes=self.miss_bytes,
+                occupancy_bytes=self._bytes,
+                spill_occupancy_bytes=self._spill_bytes,
+                blocks=len(self._blocks), spill_blocks=len(self._spill_index),
+                hit_ratio=self.hit_ratio(),
+            )
+
+    # -- lookup --------------------------------------------------------------
+    def get_block(self, path: str, index: int,
+                  loader: Callable[[], bytes]) -> bytes:
+        """Return block ``index`` of ``path``, loading via ``loader`` on a
+        miss.  Concurrent callers for the same missing block share one
+        loader call (single-flight); a loader failure propagates to every
+        waiter and drops the flight so the next call retries."""
+        m = metrics.enabled()
+        t0 = time.monotonic() if m else 0.0
+        key = (path, index)
+        fut: Optional[Future] = None
+        leader = False
+        gen = 0
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("get_block() on a closed BlockCache")
+            blk = self._blocks.get(key)
+            if blk is not None:
+                self._blocks.move_to_end(key)
+                self.hits += 1
+                self.hit_bytes += len(blk)
+            else:
+                self.misses += 1
+                fut = self._inflight.get(key)
+                if fut is not None:
+                    self.single_flight_waits += 1
+                else:
+                    fut = Future()
+                    gen = self._gen.get(path, 0)
+                    self._inflight[key] = fut
+                    leader = True
+        if blk is not None:
+            if m:
+                metrics.inc("cache.hits", 1, cache=self.name)
+                metrics.inc("cache.hit_bytes", len(blk), cache=self.name)
+                metrics.observe("cache.lookup_s", time.monotonic() - t0,
+                                cache=self.name)
+            return blk
+        if m:
+            metrics.inc("cache.misses", 1, cache=self.name)
+            if not leader:
+                metrics.inc("cache.single_flight_waits", 1, cache=self.name)
+        if leader:
+            self._fill(key, fut, gen, loader)
+        data = fut.result()
+        if m:
+            metrics.observe("cache.lookup_s", time.monotonic() - t0,
+                            cache=self.name)
+        return data
+
+    # -- miss path (leader only) ---------------------------------------------
+    def _fill(self, key: Tuple[str, int], fut: Future, gen: int,
+              loader: Callable[[], bytes]) -> None:
+        try:
+            data = self._load(key, loader)
+        except BaseException as e:
+            with self._lock:
+                if self._inflight.get(key) is fut:
+                    del self._inflight[key]
+            fut.set_exception(e)
+            return
+        spill_jobs: List[Tuple[Tuple[str, int], bytes]] = []
+        with self._lock:
+            if self._inflight.get(key) is fut:
+                del self._inflight[key]
+            fresh = (not self._closed
+                     and self._gen.get(key[0], 0) == gen)
+            if fresh and len(data) <= self.capacity:
+                self._blocks[key] = data
+                self._bytes += len(data)
+                while self._bytes > self.capacity:
+                    k2, b2 = self._blocks.popitem(last=False)
+                    self._bytes -= len(b2)
+                    self.evictions += 1
+                    spill_jobs.append((k2, b2))
+            self.miss_bytes += len(data)
+        fut.set_result(data)
+        if spill_jobs and metrics.enabled():
+            metrics.inc("cache.evictions", len(spill_jobs), cache=self.name)
+        for k2, b2 in spill_jobs:
+            self._spill_block(k2, b2)
+
+    def _load(self, key: Tuple[str, int],
+              loader: Callable[[], bytes]) -> bytes:
+        """Fetch a block: spill-arena probe first, then the slow tier."""
+        path, _index = key
+        if self._spill is not None:
+            slot_ent = None
+            with self._lock:
+                ent = self._spill_index.get(key)
+                if ent is not None:
+                    self._spill_index.move_to_end(key)
+                    slot_ent = ent
+                    self._pin_locked(ent[0])
+            if slot_ent is not None:
+                slot, length = slot_ent
+                try:
+                    with trace.span(trace.STAGE_CACHE,
+                                    f"spill_read:{path}") as sp:
+                        data = bytes(self._spill.read_range(
+                            self._spill_path, slot * self.block_size, length))
+                        sp.set_bytes(len(data))
+                finally:
+                    with self._lock:
+                        self._unpin_locked(slot)
+                self.spill_hits += 1
+                if metrics.enabled():
+                    metrics.inc("cache.spill_hits", 1, cache=self.name)
+                return data
+        with trace.span(trace.STAGE_CACHE, f"fill:{path}") as sp:
+            data = loader()
+            if type(data) is not bytes:
+                data = bytes(data)
+            sp.set_bytes(len(data))
+        return data
+
+    # -- spill tier ----------------------------------------------------------
+    def _pin_locked(self, slot: int) -> None:
+        self._pins[slot] = self._pins.get(slot, 0) + 1
+
+    def _unpin_locked(self, slot: int) -> None:
+        n = self._pins.get(slot, 0) - 1
+        if n <= 0:
+            self._pins.pop(slot, None)
+        else:
+            self._pins[slot] = n
+
+    def _alloc_slot_locked(self) -> Optional[int]:
+        """A free arena slot: the free list, fresh arena growth under the
+        spill budget, or the LRU spill entry's slot.  Pinned slots (a reader
+        or writer is mid-I/O on them) are never reused."""
+        for i, s in enumerate(self._free_slots):
+            if s not in self._pins:
+                return self._free_slots.pop(i)
+        if (self._next_slot + 1) * self.block_size <= self._spill_cap:
+            s = self._next_slot
+            self._next_slot += 1
+            return s
+        for k in self._spill_index:
+            slot, length = self._spill_index[k]
+            if slot not in self._pins:
+                del self._spill_index[k]
+                self._spill_bytes -= length
+                return slot
+        return None
+
+    def _spill_block(self, key: Tuple[str, int], data: bytes) -> None:
+        """Demote an evicted DRAM block into the spill arena (best-effort:
+        a spill failure just drops the block — the slow tier still has it)."""
+        if self._spill is None or len(data) > self.block_size:
+            return
+        path = key[0]
+        with self._lock:
+            if self._closed:
+                return
+            if key in self._spill_index:          # inclusive tiers: already
+                self._spill_index.move_to_end(key)  # resident in the arena
+                return
+            gen = self._gen.get(path, 0)
+            slot = self._alloc_slot_locked()
+            if slot is None:
+                return
+            self._pin_locked(slot)                # pin through the write
+        try:
+            with trace.span(trace.STAGE_CACHE, f"spill_write:{path}") as sp:
+                self._spill.write_range(self._spill_path,
+                                        slot * self.block_size, data)
+                sp.set_bytes(len(data))
+        except Exception:
+            with self._lock:
+                self._unpin_locked(slot)
+                self._free_slots.append(slot)
+            return
+        with self._lock:
+            self._unpin_locked(slot)
+            if self._gen.get(path, 0) == gen and not self._closed:
+                self._spill_index[key] = (slot, len(data))
+                self._spill_bytes += len(data)
+                self.spills += 1
+            else:
+                self._free_slots.append(slot)
+        if metrics.enabled():
+            metrics.inc("cache.spills", 1, cache=self.name)
+            metrics.inc("cache.spilled_bytes", len(data), cache=self.name)
+
+    # -- invalidation --------------------------------------------------------
+    def invalidate(self, path: str, prefix: bool = False) -> None:
+        """Drop every cached/spilled block of ``path`` (or, with
+        ``prefix=True``, of any path under it) and bump its generation so
+        in-flight loads started before the mutation never publish."""
+        def match(p: str) -> bool:
+            return p == path or (prefix and p.startswith(path + "/"))
+
+        with self._lock:
+            touched = {k[0] for k in self._blocks if match(k[0])}
+            touched |= {k[0] for k in self._spill_index if match(k[0])}
+            touched |= {k[0] for k in self._inflight if match(k[0])}
+            touched.add(path)
+            for p in touched:
+                self._gen[p] = self._gen.get(p, 0) + 1
+            for k in [k for k in self._blocks if match(k[0])]:
+                blk = self._blocks.pop(k)
+                self._bytes -= len(blk)
+            for k in [k for k in self._spill_index if match(k[0])]:
+                slot, length = self._spill_index.pop(k)
+                self._spill_bytes -= length
+                self._free_slots.append(slot)
+
+    def clear(self) -> None:
+        """Drop everything (``drop_caches`` analogue)."""
+        with self._lock:
+            paths = {k[0] for k in self._blocks}
+            paths |= {k[0] for k in self._spill_index}
+            paths |= {k[0] for k in self._inflight}
+            for p in paths:
+                self._gen[p] = self._gen.get(p, 0) + 1
+            self._blocks.clear()
+            self._bytes = 0
+            for slot, _length in self._spill_index.values():
+                self._free_slots.append(slot)
+            self._spill_index.clear()
+            self._spill_bytes = 0
+
+    def close(self) -> None:
+        """Unregister the gauges and drop all state (idempotent)."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        self.clear()
+        metrics.unregister_gauge("cache.occupancy_bytes", cache=self.name)
+        metrics.unregister_gauge("cache.hit_ratio", cache=self.name)
+        if self._spill is not None:
+            metrics.unregister_gauge("cache.spill_occupancy_bytes",
+                                     cache=self.name)
+            try:
+                if self._spill.exists(self._spill_path):
+                    self._spill.remove(self._spill_path)
+            except OSError:
+                pass
+
+    def __enter__(self) -> "BlockCache":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class CachingStorage(Storage):
+    """Transparent :class:`Storage` wrapper serving reads from a
+    :class:`BlockCache`.
+
+    Reads split into aligned blocks keyed ``(path, block)``; a range within
+    one block returns a zero-copy ``memoryview`` of the cached bytes, a
+    single-block file returns the cached ``bytes`` object itself, and only
+    multi-block assembly copies (once, into a fresh ``bytearray``).  Every
+    mutating op writes through to the inner storage *first*, then
+    invalidates — so a concurrent load that raced the write can never
+    publish stale data under the new generation.
+
+    File sizes are memoized per path (block math needs them on every read)
+    and invalidated together with the data blocks.
+    """
+
+    def __init__(self, inner: Storage, cache: BlockCache):
+        self.inner = inner
+        self.cache = cache
+        self.name = f"cached({getattr(inner, 'name', '?')})"
+        self._sizes: Dict[str, int] = {}
+        self._sizes_lock = threading.Lock()
+
+    # -- block plumbing ------------------------------------------------------
+    def _file_size(self, path: str) -> int:
+        with self._sizes_lock:
+            s = self._sizes.get(path)
+        if s is None:
+            s = self.inner.size(path)
+            with self._sizes_lock:
+                self._sizes[path] = s
+        return s
+
+    def _block(self, path: str, index: int) -> bytes:
+        bs = self.cache.block_size
+        return self.cache.get_block(
+            path, index,
+            lambda: self.inner.read_range(path, index * bs, bs))
+
+    def prefetch_block(self, path: str, index: int) -> None:
+        """Warm one block (readahead entry point); shares the single-flight
+        future with any concurrent foreground read of the same block."""
+        self._block(path, index)
+
+    def n_blocks(self, path: str) -> int:
+        size = self._file_size(path)
+        bs = self.cache.block_size
+        return max(1, (size + bs - 1) // bs)
+
+    # -- reads ---------------------------------------------------------------
+    def read_file(self, path: str) -> bytes:
+        size = self._file_size(path)
+        bs = self.cache.block_size
+        if size <= bs:
+            return self._block(path, 0)   # the cached object itself: 0-copy
+        out = bytearray(size)
+        pos = 0
+        for i in range((size + bs - 1) // bs):
+            blk = self._block(path, i)
+            out[pos:pos + len(blk)] = blk
+            pos += len(blk)
+        return bytes(out)
+
+    def read_range(self, path: str, offset: int, length: int) -> bytes:
+        size = self._file_size(path)
+        end = min(offset + length, size)
+        if offset >= end:
+            return b""
+        bs = self.cache.block_size
+        first, last = offset // bs, (end - 1) // bs
+        if first == last:
+            blk = self._block(path, first)
+            return memoryview(blk)[offset - first * bs: end - first * bs]
+        out = bytearray(end - offset)
+        pos = 0
+        for i in range(first, last + 1):
+            blk = self._block(path, i)
+            lo = offset - i * bs if i == first else 0
+            hi = end - i * bs if i == last else len(blk)
+            out[pos:pos + hi - lo] = memoryview(blk)[lo:hi]
+            pos += hi - lo
+        return bytes(out)
+
+    # -- writes (write-through + invalidate) ---------------------------------
+    def _invalidate(self, path: str, prefix: bool = False) -> None:
+        self.cache.invalidate(path, prefix=prefix)
+        with self._sizes_lock:
+            if prefix:
+                for p in [p for p in self._sizes
+                          if p == path or p.startswith(path + "/")]:
+                    del self._sizes[p]
+            else:
+                self._sizes.pop(path, None)
+
+    def write_file(self, path: str, data: bytes, sync: bool = False) -> None:
+        self.inner.write_file(path, data, sync=sync)
+        self._invalidate(path)
+
+    def append_file(self, path: str, data: bytes, sync: bool = False) -> None:
+        self.inner.append_file(path, data, sync=sync)
+        self._invalidate(path)
+
+    def write_range(self, path: str, offset: int, data: bytes,
+                    sync: bool = False) -> None:
+        self.inner.write_range(path, offset, data, sync=sync)
+        self._invalidate(path)
+
+    def fsync_dir(self, path: str) -> None:
+        self.inner.fsync_dir(path)
+
+    # -- namespace -----------------------------------------------------------
+    def listdir(self, path: str) -> List[str]:
+        return self.inner.listdir(path)
+
+    def exists(self, path: str) -> bool:
+        return self.inner.exists(path)
+
+    def makedirs(self, path: str) -> None:
+        self.inner.makedirs(path)
+
+    def remove(self, path: str) -> None:
+        self.inner.remove(path)
+        self._invalidate(path, prefix=True)   # may have been a directory
+
+    def rename(self, src: str, dst: str) -> None:
+        self.inner.rename(src, dst)
+        self._invalidate(src, prefix=True)
+        self._invalidate(dst, prefix=True)
+
+    def size(self, path: str) -> int:
+        return self._file_size(path)
+
+    def drop_caches(self) -> None:
+        self.cache.clear()
+        with self._sizes_lock:
+            self._sizes.clear()
+        self.inner.drop_caches()
+
+
+class ReadaheadScheduler:
+    """Prefetch upcoming shard blocks onto the shared reader pool.
+
+    ``sharded_image_pipeline(readahead=...)`` announces each shard path as
+    it enters the lookahead buffer (``lookahead_shards`` ahead of the
+    interleave cursor); :meth:`schedule` enqueues the shard's blocks and at
+    most ``window`` block fetches are in flight at once — the per-stage
+    window discipline of PR 3, so a grown pool never turns readahead into
+    unbounded concurrency.  Fetch errors are swallowed (the consumer's own
+    read will surface them through the normal retry/quarantine path).
+    """
+
+    def __init__(self, storage: CachingStorage, *, window: int = 8,
+                 lookahead_shards: int = 2, pool=None):
+        if not isinstance(storage, CachingStorage):
+            raise TypeError(
+                f"readahead needs a CachingStorage to prefetch into, got "
+                f"{type(storage).__name__}")
+        self.storage = storage
+        self.window = max(1, int(window))
+        self.lookahead_shards = max(1, int(lookahead_shards))
+        self._pool = pool
+        self._lock = threading.Lock()
+        self._idle = threading.Condition(self._lock)
+        self._queue: deque = deque()    # (path, block) pending
+        self._inflight = 0
+        self._closed = False
+        self.scheduled = 0
+        self.loaded = 0
+        self.errors = 0
+
+    def schedule(self, path: str) -> None:
+        """Enqueue every block of ``path`` for prefetch."""
+        try:
+            n = self.storage.n_blocks(path)
+        except OSError:
+            return      # the foreground read will report the real error
+        with self._lock:
+            if self._closed:
+                return
+            self._queue.extend((path, i) for i in range(n))
+            self.scheduled += n
+        if metrics.enabled():
+            metrics.inc("cache.readahead_blocks", n,
+                        cache=self.storage.cache.name)
+        self._pump()
+
+    def _pump(self) -> None:
+        while True:
+            with self._lock:
+                if (self._closed or self._inflight >= self.window
+                        or not self._queue):
+                    return
+                path, idx = self._queue.popleft()
+                self._inflight += 1
+            pool = self._pool if self._pool is not None \
+                else reader_pool(self.window)
+            pool.submit(self._fetch, path, idx)
+
+    def _fetch(self, path: str, idx: int) -> None:
+        try:
+            self.storage.prefetch_block(path, idx)
+            with self._lock:
+                self.loaded += 1
+        except Exception:
+            with self._lock:
+                self.errors += 1
+        finally:
+            with self._lock:
+                self._inflight -= 1
+                self._idle.notify_all()
+            self._pump()
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Wait until the queue is empty and nothing is in flight."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            while self._queue or self._inflight:
+                left = None if deadline is None \
+                    else max(0.0, deadline - time.monotonic())
+                if left == 0.0:
+                    return False
+                self._idle.wait(timeout=left)
+        return True
+
+    def clear(self) -> None:
+        """Drop not-yet-submitted prefetches (epoch teardown)."""
+        with self._lock:
+            self._queue.clear()
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            self._queue.clear()

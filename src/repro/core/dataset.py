@@ -131,6 +131,61 @@ class _InterleaveSlot:
         self.it: Optional[Iterator] = None
 
 
+def _shard_key(item: Any) -> Any:
+    """Stable identity for a pipeline input element: the shard path for
+    ``(path, labels)`` tuples, the element itself otherwise."""
+    if isinstance(item, tuple) and item and isinstance(item[0], str):
+        return item[0]
+    return item
+
+
+class ShardQuarantine:
+    """Cross-epoch registry of shards that failed mid-stream.
+
+    ``interleave(quarantine=...)`` records every shard whose open or read
+    failed (after any retry budget underneath is exhausted).  On the next
+    epoch, instead of silently re-paying the failure, the engine
+    *probe-reads* each quarantined shard as it comes up: one cheap record
+    pull through the same ``fn``.  A shard that heals (the fault was
+    transient at a longer horizon — an OST failover finished, a flaky mount
+    recovered) is **re-admitted** and streams normally again, counted in
+    ``pipeline.readmitted_shards``; one that is still bad is skipped for
+    the rest of the epoch without burning its full retry budget.
+
+    Thread-safe; share one instance across epochs (and pipelines) for the
+    same corpus.  ``key`` maps an input element to its stable identity
+    (default: the shard path).
+    """
+
+    def __init__(self, key: Callable[[Any], Any] = _shard_key):
+        self._key = key
+        self._lock = threading.Lock()
+        self._bad: dict = {}            # key -> repr(last error)
+        self.readmitted = 0             # attribute mirror of the live counter
+
+    def quarantine(self, item: Any, exc: BaseException) -> None:
+        with self._lock:
+            self._bad[self._key(item)] = repr(exc)
+
+    def is_quarantined(self, item: Any) -> bool:
+        with self._lock:
+            return self._key(item) in self._bad
+
+    def readmit(self, item: Any) -> None:
+        with self._lock:
+            if self._bad.pop(self._key(item), None) is not None:
+                self.readmitted += 1
+
+    def quarantined(self) -> List[Any]:
+        """Currently-quarantined keys (snapshot)."""
+        with self._lock:
+            return list(self._bad)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._bad)
+
+
 class Dataset:
     """Lazily-evaluated pipeline node; iterate to pull elements through."""
 
@@ -263,6 +318,7 @@ class Dataset:
         cycle_length: int = 4,
         block_length: int = 1,
         num_parallel_calls: int = 0,
+        quarantine: Optional[ShardQuarantine] = None,
     ) -> "Dataset":
         """Expand each input element to a sub-stream via ``fn`` and interleave
         ``cycle_length`` of them round-robin, ``block_length`` elements at a
@@ -280,6 +336,12 @@ class Dataset:
         element-level markers: the failing slot is retired and the rest of
         the cycle keeps streaming, so one corrupt shard doesn't kill the
         epoch when ``ignore_errors()`` is downstream.
+
+        With a :class:`ShardQuarantine`, failed elements are additionally
+        recorded by identity; on later epochs quarantined elements are
+        probe-read before re-entering the cycle — healed shards re-admit
+        (``pipeline.readmitted_shards``), still-bad ones are skipped for
+        the epoch.
         """
         if cycle_length < 1:
             raise ValueError(f"cycle_length must be >= 1, got {cycle_length}")
@@ -305,6 +367,8 @@ class Dataset:
                         # error arriving here means the retry budget is
                         # already exhausted
                         metrics.inc("pipeline.quarantined_shards")
+                        if quarantine is not None:
+                            quarantine.quarantine(slot.item, e)
                         return [_ErrorMarker(e)], True
                 for _ in range(block_length):
                     try:
@@ -313,9 +377,24 @@ class Dataset:
                         return out, True
                     except Exception as e:
                         metrics.inc("pipeline.quarantined_shards")
+                        if quarantine is not None:
+                            quarantine.quarantine(slot.item, e)
                         out.append(_ErrorMarker(e))
                         return out, True
                 return out, False
+
+        def _probe_readmit(item) -> bool:
+            """One cheap open + single-record pull of a quarantined shard.
+            True ⇒ healed (caller re-admits); False ⇒ still bad, skip."""
+            it = None
+            try:
+                it = iter(fn(item))
+                next(it, None)
+                return True
+            except Exception:
+                return False
+            finally:
+                _close_iter(it)
 
         parallel = num_parallel_calls > 1
         window = min(cycle_length, num_parallel_calls) if parallel else 0
@@ -337,6 +416,13 @@ class Dataset:
                         if isinstance(nxt, _ErrorMarker):
                             yield nxt
                             continue
+                        if quarantine is not None and \
+                                quarantine.is_quarantined(nxt):
+                            if _probe_readmit(nxt):
+                                quarantine.readmit(nxt)
+                                metrics.inc("pipeline.readmitted_shards")
+                            else:
+                                continue    # still bad: skip this epoch
                         cycle.append(_InterleaveSlot(nxt))
                     if not cycle:
                         return
@@ -855,6 +941,9 @@ def sharded_image_pipeline(
     num_shards: int = 1,
     shard_index: int = 0,
     batched_preprocess: Optional[str] = None,
+    cache=None,
+    readahead=None,
+    quarantine: Optional[ShardQuarantine] = None,
 ) -> Dataset:
     """High-throughput ingestion over multi-record ``.rrf`` shards.
 
@@ -870,8 +959,41 @@ def sharded_image_pipeline(
     the fused device kernel (:func:`repro.kernels.preprocess.
     resize_convert_images`).  Both require a uniform-size corpus
     (``write_sharded_image_dataset(hw_jitter=0)``).
+
+    ``cache`` serves shard reads through a block cache: pass a
+    :class:`~repro.core.cache.BlockCache` (wrapped here) or a ready-made
+    :class:`~repro.core.cache.CachingStorage` — warm epochs then stream
+    from DRAM (and the spill tier, if configured) instead of re-reading
+    the device.  ``readahead`` prefetches upcoming shards' blocks ahead
+    of the interleave cursor: a :class:`~repro.core.cache.
+    ReadaheadScheduler`, or ``True``/an int window to build one over the
+    cache (requires ``cache``).  ``quarantine`` enables cross-epoch shard
+    quarantine with probe-read re-admission (see :class:`ShardQuarantine`).
     """
     from . import records
+
+    if cache is not None:
+        from .cache import BlockCache, CachingStorage
+        if isinstance(cache, CachingStorage):
+            storage = cache
+        elif isinstance(cache, BlockCache):
+            storage = CachingStorage(storage, cache)
+        else:
+            raise TypeError(
+                f"cache= expects BlockCache or CachingStorage, got "
+                f"{type(cache).__name__}")
+
+    scheduler = None
+    if readahead is not None and readahead is not False:
+        from .cache import CachingStorage, ReadaheadScheduler
+        if isinstance(readahead, ReadaheadScheduler):
+            scheduler = readahead
+        else:
+            if not isinstance(storage, CachingStorage):
+                raise TypeError("readahead= requires cache= (prefetch "
+                                "needs a CachingStorage to land blocks in)")
+            window = 8 if readahead is True else int(readahead)
+            scheduler = ReadaheadScheduler(storage, window=window)
 
     if labels_per_shard is not None:
         items: List[Any] = [
@@ -887,6 +1009,31 @@ def sharded_image_pipeline(
     if repeat:
         src = src.repeat()
 
+    if scheduler is not None:
+        # lookahead node: announce each shard to the readahead scheduler
+        # `lookahead_shards` positions before the interleave cursor reaches
+        # it, so its blocks are (being) cached by the time it streams
+        upstream = src._gen_fn
+        lookahead = scheduler.lookahead_shards
+
+        def gen_readahead():
+            it = upstream()
+            buf: deque = deque()
+            try:
+                for item in it:
+                    if not isinstance(item, _ErrorMarker):
+                        scheduler.schedule(_shard_key(item))
+                    buf.append(item)
+                    if len(buf) > lookahead:
+                        yield buf.popleft()
+                while buf:
+                    yield buf.popleft()
+            finally:
+                scheduler.clear()   # don't prefetch past an abandoned epoch
+                _close_iter(it)
+
+        src = Dataset(gen_readahead)
+
     if labels_per_shard is not None:
         def stream_shard(item):
             path, labels = item
@@ -899,7 +1046,7 @@ def sharded_image_pipeline(
 
     ds = src.interleave(
         stream_shard, cycle_length=cycle_length, block_length=block_length,
-        num_parallel_calls=num_parallel_calls)
+        num_parallel_calls=num_parallel_calls, quarantine=quarantine)
 
     if not preprocess:
         # read-only mode (fig5): element = record byte length

@@ -141,16 +141,22 @@ def run_sharded_microbench(
     seed: int = 0,
     block_length: int = 8,
     n_batches: Optional[int] = None,
+    cache=None,
+    readahead=None,
 ) -> MicrobenchResult:
     """Ingestion bandwidth of the interleaved shard-streaming engine:
     ``threads`` shards in flight (cycle_length = num_parallel_calls =
-    threads), records decoded zero-copy into the fused batch buffer."""
+    threads), records decoded zero-copy into the fused batch buffer.
+
+    ``cache``/``readahead`` pass through to :func:`sharded_image_pipeline`:
+    a :class:`~repro.core.cache.BlockCache` serves repeat epochs warm, and
+    readahead prefetches upcoming shards' blocks onto the reader pool."""
     total_bytes = sum(storage.size(p) for p in shard_paths)
     ds = sharded_image_pipeline(
         storage, list(shard_paths), batch_size=batch_size,
         cycle_length=max(threads, 1), block_length=block_length,
         num_parallel_calls=threads, prefetch=0, out_hw=out_hw, seed=seed,
-        preprocess=preprocess)
+        preprocess=preprocess, cache=cache, readahead=readahead)
 
     n_images, seconds = _consume(ds, n_batches)
 

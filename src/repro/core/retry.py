@@ -68,7 +68,11 @@ class RetryPolicy:
     ``max_attempts`` counts *total* tries (1 = no retry).  ``deadline_s``
     caps the wall clock spent on one logical op including backoff sleeps;
     ``None`` disables it.  ``retryable`` classifies which exceptions are
-    worth another try.
+    worth another try.  ``sleep`` performs the backoff wait — inject
+    :meth:`SimulatedStorage.paced_sleep` to put retry pacing on the same
+    scaled clock as the simulated device (fig13 reproduces the faulty-path
+    latency tax exactly at any ``time_scale``), or a recording stub in
+    tests.
     """
 
     max_attempts: int = 5
@@ -77,6 +81,7 @@ class RetryPolicy:
     deadline_s: Optional[float] = 30.0
     retryable: Callable[[BaseException], bool] = field(
         default=default_classifier)
+    sleep: Callable[[float], None] = field(default=time.sleep)
 
     def __post_init__(self):
         if self.max_attempts < 1:
@@ -126,7 +131,7 @@ def retry_call(policy: RetryPolicy, fn: Callable, *args,
             if deadline is not None:
                 delay = min(delay, max(0.0, deadline - time.monotonic()))
             if delay > 0:
-                time.sleep(delay)
+                policy.sleep(delay)
 
 
 class RetryingStorage(Storage):

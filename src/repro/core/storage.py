@@ -394,6 +394,15 @@ class SimulatedStorage(Storage):
         if lat > 0:
             time.sleep(lat)
 
+    def paced_sleep(self, seconds: float) -> None:
+        """Sleep ``seconds`` of *modelled* time, i.e. ``seconds *
+        time_scale`` of wall clock.  Inject as ``RetryPolicy(sleep=...)`` so
+        retry backoff runs on the same scaled clock as the device pacing —
+        the faulty-path latency tax then reproduces at any ``time_scale``."""
+        wall = seconds * self.time_scale
+        if wall > 0:
+            time.sleep(wall)
+
     def _abs(self, path: str) -> str:
         return os.path.join(self.root, path)
 

@@ -47,6 +47,7 @@ Typical use::
 from .tracer import (
     INPUT_PIPELINE_STAGES,
     NULL_SPAN,
+    STAGE_CACHE,
     STAGE_CKPT_RESTORE,
     STAGE_CKPT_SNAPSHOT,
     STAGE_CKPT_WRITE,
@@ -91,6 +92,7 @@ __all__ = [
     "STAGE_PREFETCH", "STAGE_CKPT_SNAPSHOT", "STAGE_CKPT_WRITE",
     "STAGE_CKPT_RESTORE",
     "STAGE_DRAIN", "STAGE_STAGE", "STAGE_DATA_WAIT", "STAGE_COMPUTE",
+    "STAGE_CACHE",
     "INPUT_PIPELINE_STAGES",
     # reports
     "StageStats", "aggregate", "percentile", "overlap_ratio",

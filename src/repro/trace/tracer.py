@@ -43,13 +43,15 @@ STAGE_STAGE = "bb_stage"                  # async-bb fast-tier staging write
 #                                           (off the training thread)
 STAGE_DATA_WAIT = "data_wait"             # trainer blocked on next(batch)
 STAGE_COMPUTE = "compute"                 # trainer forward/backward/update
+STAGE_CACHE = "cache"                     # block-cache miss fill / spill I/O
 
 #: Stages that make up the input pipeline (vs. STAGE_COMPUTE) — the two
 #: interval sets whose overlap is the paper's Fig. 6 observable.
 #: STAGE_STORAGE_READ is deliberately absent: pipeline reads are already
 #: nested inside STAGE_DECODE/STAGE_PREFETCH spans, while *non*-pipeline
 #: reads (checkpoint restore, burst-buffer drain) would otherwise count as
-#: "input pipeline busy" and inflate the overlap ratio.
+#: "input pipeline busy" and inflate the overlap ratio.  STAGE_CACHE is
+#: excluded for the same reason: cache fills nest inside the read path.
 INPUT_PIPELINE_STAGES = (STAGE_DECODE, STAGE_PREFETCH, STAGE_DATA_WAIT)
 
 

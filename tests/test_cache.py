@@ -1,0 +1,390 @@
+"""Block read-cache: single-flight dedup, budget invariants, spill tier,
+invalidation, retry composition, readahead window, and the cache-on ==
+cache-off pipeline equivalence property."""
+import tempfile
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # bare env (see `test` extra in pyproject.toml)
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro import metrics
+from repro.core import records
+from repro.core.cache import BlockCache, CachingStorage, ReadaheadScheduler
+from repro.core.dataset import sharded_image_pipeline
+from repro.core.faults import FaultyStorage
+from repro.core.readerpool import reader_pool
+from repro.core.retry import RetryingStorage, RetryPolicy
+from repro.core.storage import NativeStorage
+
+
+def _read_ops(counted: FaultyStorage) -> int:
+    with counted._lock:
+        return sum(1 for (op, _p, _n) in counted.op_log
+                   if op in ("read_file", "read_range"))
+
+
+class _SlowStorage(NativeStorage):
+    """Each range read takes ~10 ms — long enough that racing readers pile
+    up on the in-flight future instead of finding the block already cached."""
+
+    def read_range(self, path, offset, length):
+        time.sleep(0.01)
+        return super().read_range(path, offset, length)
+
+
+class TestSingleFlight:
+    def test_16_racing_readers_one_storage_read_per_block(self):
+        blob = bytes(range(256)) * 1024          # 256 KiB = 4 x 64 KiB blocks
+        tmp = tempfile.TemporaryDirectory()
+        slow = _SlowStorage(tmp.name)
+        slow.write_file("f", blob)
+        counted = FaultyStorage(slow)
+        with BlockCache(1 << 22, block_size=64 * 1024) as cache:
+            cst = CachingStorage(counted, cache)
+            barrier = threading.Barrier(16)
+
+            def racer(_):
+                barrier.wait(5)
+                return cst.read_file("f")
+
+            with ThreadPoolExecutor(16) as pool:
+                outs = list(pool.map(racer, range(16)))
+            assert all(o == blob for o in outs)
+            # the device saw each block exactly once, no duplicate reads
+            assert _read_ops(counted) == 4
+            s = cache.stats()
+            assert s["single_flight_waits"] > 0
+            assert s["misses"] >= 4 and s["miss_bytes"] == len(blob)
+
+    def test_loader_error_propagates_and_flight_is_dropped(self, tmp_storage):
+        tmp_storage.write_file("f", b"x" * 100)
+        counted = FaultyStorage(tmp_storage).transient(n_ops=1, ops=("read",))
+        with BlockCache(1 << 20) as cache:
+            cst = CachingStorage(counted, cache)
+            with pytest.raises(OSError):
+                cst.read_file("f")
+            # failed flight removed: a fresh call re-drives the loader
+            assert cst.read_file("f") == b"x" * 100
+
+    def test_retry_above_cache_absorbs_transient(self, tmp_storage):
+        tmp_storage.write_file("f", b"y" * 100)
+        faulty = FaultyStorage(tmp_storage).transient(n_ops=1, ops=("read",))
+        with BlockCache(1 << 20) as cache:
+            rs = RetryingStorage(
+                CachingStorage(faulty, cache),
+                RetryPolicy(max_attempts=3, base_delay_s=1e-4,
+                            max_delay_s=1e-3))
+            assert rs.read_file("f") == b"y" * 100
+            assert rs.retries == 1
+
+
+class TestBudgetInvariants:
+    def test_occupancy_never_exceeds_capacity(self, tmp_storage):
+        rng = np.random.default_rng(0)
+        for i in range(8):
+            tmp_storage.write_file(f"f{i}", bytes(rng.integers(
+                0, 256, size=3000, dtype=np.uint8)))
+        with BlockCache(4096, block_size=1024) as cache:
+            cst = CachingStorage(tmp_storage, cache)
+            for i in rng.permutation(np.repeat(np.arange(8), 4)):
+                cst.read_file(f"f{i}")
+                assert cache.occupancy_bytes <= cache.capacity
+            assert cache.stats()["evictions"] > 0
+
+    def test_lru_keeps_recent_blocks(self, tmp_storage):
+        for i in range(3):
+            tmp_storage.write_file(f"f{i}", bytes([i]) * 1024)
+        counted = FaultyStorage(tmp_storage)
+        with BlockCache(2048, block_size=1024) as cache:   # room for 2
+            cst = CachingStorage(counted, cache)
+            cst.read_file("f0")
+            cst.read_file("f1")
+            cst.read_file("f0")        # f0 now MRU
+            cst.read_file("f2")        # evicts f1 (LRU), not f0
+            n = _read_ops(counted)
+            cst.read_file("f0")        # hit
+            assert _read_ops(counted) == n
+            cst.read_file("f1")        # miss (was evicted)
+            assert _read_ops(counted) == n + 1
+
+    def test_oversized_block_served_but_not_cached(self, tmp_storage):
+        tmp_storage.write_file("big", b"z" * 4096)
+        with BlockCache(1024, block_size=8192) as cache:
+            cst = CachingStorage(tmp_storage, cache)
+            assert cst.read_file("big") == b"z" * 4096
+            assert cache.occupancy_bytes == 0
+
+
+class TestZeroCopy:
+    def test_single_block_file_returns_cached_object(self, tmp_storage):
+        tmp_storage.write_file("f", b"q" * 500)
+        with BlockCache(1 << 20) as cache:
+            cst = CachingStorage(tmp_storage, cache)
+            a = cst.read_file("f")
+            b = cst.read_file("f")
+            assert a is b                      # the cached bytes, no copy
+
+    def test_intra_block_range_is_memoryview(self, tmp_storage):
+        tmp_storage.write_file("f", bytes(range(200)))
+        with BlockCache(1 << 20) as cache:
+            cst = CachingStorage(tmp_storage, cache)
+            mv = cst.read_range("f", 10, 20)
+            assert isinstance(mv, memoryview)
+            assert bytes(mv) == bytes(range(10, 30))
+
+    def test_multi_block_range_assembles(self, tmp_storage):
+        blob = bytes(np.random.default_rng(1).integers(
+            0, 256, size=5000, dtype=np.uint8))
+        tmp_storage.write_file("f", blob)
+        with BlockCache(1 << 20, block_size=1024) as cache:
+            cst = CachingStorage(tmp_storage, cache)
+            assert bytes(cst.read_range("f", 500, 3000)) == blob[500:3500]
+            assert bytes(cst.read_range("f", 0, 99999)) == blob
+            assert cst.read_range("f", 6000, 10) == b""
+
+
+class TestInvalidation:
+    def test_write_through_invalidates(self, tmp_storage):
+        with BlockCache(1 << 20) as cache:
+            cst = CachingStorage(tmp_storage, cache)
+            cst.write_file("f", b"old")
+            assert cst.read_file("f") == b"old"
+            cst.write_file("f", b"newer")
+            assert cst.read_file("f") == b"newer"
+            assert cst.size("f") == 5
+
+    def test_rename_and_remove_invalidate(self, tmp_storage):
+        with BlockCache(1 << 20) as cache:
+            cst = CachingStorage(tmp_storage, cache)
+            cst.write_file("a", b"aaa")
+            cst.read_file("a")
+            cst.rename("a", "b")
+            assert cst.read_file("b") == b"aaa"
+            assert not cst.exists("a")
+            cst.remove("b")
+            with pytest.raises(FileNotFoundError):
+                cst.read_file("b")
+
+    def test_inflight_load_never_publishes_stale(self, tmp_storage):
+        with BlockCache(1 << 20) as cache:
+            started, release = threading.Event(), threading.Event()
+
+            def slow_stale_loader():
+                started.set()
+                release.wait(5)
+                return b"stale"
+
+            fut = ThreadPoolExecutor(1).submit(
+                cache.get_block, "p", 0, slow_stale_loader)
+            assert started.wait(5)
+            cache.invalidate("p")       # the write landed mid-load
+            release.set()
+            assert fut.result(5) == b"stale"   # the old reader gets old data
+            # ...but the cache refused to publish it under the new generation
+            assert cache.get_block("p", 0, lambda: b"fresh") == b"fresh"
+
+
+class TestSpillTier:
+    def test_evictions_spill_and_serve_from_fast_tier(self, tmp_storage):
+        rng = np.random.default_rng(2)
+        blobs = {f"f{i}": bytes(rng.integers(0, 256, size=1000,
+                                             dtype=np.uint8))
+                 for i in range(6)}
+        for p, b in blobs.items():
+            tmp_storage.write_file(p, b)
+        with tempfile.TemporaryDirectory() as d:
+            fast = NativeStorage(d)
+            counted = FaultyStorage(tmp_storage)
+            with BlockCache(2048, block_size=1024, spill_storage=fast,
+                            spill_capacity_bytes=1 << 20) as cache:
+                cst = CachingStorage(counted, cache)
+                for p in blobs:                 # fills DRAM, spills the rest
+                    cst.read_file(p)
+                assert cache.stats()["spills"] > 0
+                assert fast.exists("cache/spill.arena")
+                n = _read_ops(counted)
+                for p, b in blobs.items():      # every re-read: DRAM or spill
+                    assert cst.read_file(p) == b
+                assert _read_ops(counted) == n  # slow tier untouched
+                assert cache.stats()["spill_hits"] > 0
+
+    def test_spill_capacity_bounds_arena(self, tmp_storage):
+        for i in range(8):
+            tmp_storage.write_file(f"f{i}", bytes([i]) * 1024)
+        with tempfile.TemporaryDirectory() as d:
+            fast = NativeStorage(d)
+            with BlockCache(1024, block_size=1024, spill_storage=fast,
+                            spill_capacity_bytes=3 * 1024) as cache:
+                cst = CachingStorage(tmp_storage, cache)
+                for i in range(8):
+                    cst.read_file(f"f{i}")
+                assert cache.spill_occupancy_bytes <= 3 * 1024
+                assert fast.size("cache/spill.arena") <= 3 * 1024
+
+    def test_close_removes_arena(self, tmp_storage):
+        tmp_storage.write_file("f0", b"a" * 1024)
+        tmp_storage.write_file("f1", b"b" * 1024)
+        with tempfile.TemporaryDirectory() as d:
+            fast = NativeStorage(d)
+            cache = BlockCache(1024, block_size=1024, spill_storage=fast)
+            cst = CachingStorage(tmp_storage, cache)
+            cst.read_file("f0")
+            cst.read_file("f1")    # evicts+spills f0
+            assert fast.exists("cache/spill.arena")
+            cache.close()
+            assert not fast.exists("cache/spill.arena")
+
+
+class TestObservability:
+    def test_gauges_registered_and_unregistered_on_close(self, tmp_storage):
+        tmp_storage.write_file("f", b"m" * 100)
+        reg = metrics.start()
+        try:
+            cache = BlockCache(1 << 20, name="t-obs")
+            cst = CachingStorage(tmp_storage, cache)
+            cst.read_file("f")
+            cst.read_file("f")
+            snap = reg.collect()
+            assert snap["gauges"]['cache.occupancy_bytes{cache="t-obs"}'] == 100
+            assert snap["gauges"]['cache.hit_ratio{cache="t-obs"}'] == 0.5
+            assert snap["counters"]['cache.hits{cache="t-obs"}'] == 1
+            assert snap["counters"]['cache.misses{cache="t-obs"}'] == 1
+            cache.close()
+            snap = reg.collect()
+            assert not any(k.startswith("cache.") for k in snap["gauges"])
+        finally:
+            metrics.stop()
+
+    def test_attribute_counters_work_with_metrics_off(self, tmp_storage):
+        tmp_storage.write_file("f", b"m" * 100)
+        with BlockCache(1 << 20) as cache:
+            cst = CachingStorage(tmp_storage, cache)
+            cst.read_file("f")
+            cst.read_file("f")
+            assert cache.hits == 1 and cache.misses == 1
+            assert cache.hit_ratio() == 0.5
+
+    def test_closed_cache_rejects_lookups(self):
+        cache = BlockCache(1 << 20)
+        cache.close()
+        cache.close()                   # idempotent
+        with pytest.raises(RuntimeError):
+            cache.get_block("p", 0, lambda: b"")
+
+
+class _GateStorage(NativeStorage):
+    """read_range blocks on a gate; tracks the concurrency high-water mark."""
+
+    def __init__(self, root):
+        super().__init__(root)
+        self.gate = threading.Event()
+        self._clock = threading.Lock()
+        self.concurrent = 0
+        self.max_concurrent = 0
+
+    def read_range(self, path, offset, length):
+        with self._clock:
+            self.concurrent += 1
+            self.max_concurrent = max(self.max_concurrent, self.concurrent)
+        try:
+            self.gate.wait(5)
+            return super().read_range(path, offset, length)
+        finally:
+            with self._clock:
+                self.concurrent -= 1
+
+
+class TestReadahead:
+    def test_window_caps_inflight_fetches(self):
+        with tempfile.TemporaryDirectory() as d:
+            gated = _GateStorage(d)
+            gated.write_file("s0", b"r" * 8192)     # 8 blocks of 1 KiB
+            with BlockCache(1 << 20, block_size=1024) as cache:
+                cst = CachingStorage(gated, cache)
+                ra = ReadaheadScheduler(cst, window=2,
+                                        pool=reader_pool(4))
+                ra.schedule("s0")
+                deadline = time.monotonic() + 5
+                while gated.concurrent < 2 and time.monotonic() < deadline:
+                    time.sleep(0.01)
+                assert ra.scheduled == 8
+                assert gated.max_concurrent <= 2    # the window cap held
+                gated.gate.set()
+                assert ra.drain(timeout=5)
+                assert ra.loaded == 8
+                assert gated.max_concurrent <= 2
+                ra.close()
+
+    def test_prefetched_blocks_serve_without_new_reads(self, tmp_storage):
+        blob = bytes(range(256)) * 16
+        tmp_storage.write_file("s0", blob)
+        counted = FaultyStorage(tmp_storage)
+        with BlockCache(1 << 20, block_size=1024) as cache:
+            cst = CachingStorage(counted, cache)
+            ra = ReadaheadScheduler(cst, window=4)
+            ra.schedule("s0")
+            assert ra.drain(timeout=5)
+            n = _read_ops(counted)
+            assert cst.read_file("s0") == blob
+            assert _read_ops(counted) == n
+            ra.close()
+
+    def test_requires_caching_storage(self, tmp_storage):
+        with pytest.raises(TypeError):
+            ReadaheadScheduler(tmp_storage)
+
+    def test_errors_swallowed_and_counted(self, tmp_storage):
+        tmp_storage.write_file("s0", b"e" * 2048)
+        flaky = FaultyStorage(tmp_storage).transient(n_ops=1, ops=("read",))
+        with BlockCache(1 << 20, block_size=1024) as cache:
+            cst = CachingStorage(flaky, cache)
+            ra = ReadaheadScheduler(cst, window=1)
+            ra.schedule("s0")
+            assert ra.drain(timeout=5)
+            assert ra.errors >= 1
+            # foreground read still works (fault was transient)
+            assert cst.read_file("s0") == b"e" * 2048
+            ra.close()
+
+
+class TestPipelineEquivalence:
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16),
+           cap_blocks=st.integers(1, 64),
+           readahead=st.booleans())
+    def test_cache_on_matches_cache_off_bit_identical(
+            self, seed, cap_blocks, readahead):
+        """Same corpus, same seed: the cached pipeline must yield exactly
+        the batches of the uncached one, in the same order, for any budget
+        (heavy eviction included) with readahead racing the consumers."""
+        with tempfile.TemporaryDirectory() as d:
+            st_ = NativeStorage(d)
+            paths, labels = records.write_sharded_image_dataset(
+                st_, n_images=24, images_per_shard=6, mean_hw=(24, 24),
+                seed=0)
+
+            def batches(storage, **kw):
+                ds = sharded_image_pipeline(
+                    storage, paths, labels, batch_size=6, cycle_length=2,
+                    block_length=3, num_parallel_calls=2, prefetch=0,
+                    out_hw=(8, 8), seed=seed, **kw)
+                return [(i.copy(), l.copy()) for i, l in ds]
+
+            expected = batches(st_)
+            with BlockCache(cap_blocks * 4096, block_size=4096) as cache:
+                got = batches(st_, cache=cache,
+                              readahead=2 if readahead else None)
+                got_warm = batches(st_, cache=cache)   # epoch 2: warm
+            assert len(expected) == len(got) == len(got_warm)
+            for (ei, el), (gi, gl), (wi, wl) in zip(expected, got, got_warm):
+                np.testing.assert_array_equal(ei, gi)
+                np.testing.assert_array_equal(el, gl)
+                np.testing.assert_array_equal(ei, wi)
+                np.testing.assert_array_equal(el, wl)

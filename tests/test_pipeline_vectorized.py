@@ -423,3 +423,115 @@ class TestMicrobenchPaths:
         rs = run_sharded_microbench(st, shard_paths, threads=2, batch_size=4,
                                     out_hw=(8, 8))
         assert rs.n_images == 24 and rs.total_bytes > 0
+
+
+class TestShardQuarantine:
+    """Cross-epoch quarantine + probe-read re-admission (interleave)."""
+
+    def _stream_fn(self, bad):
+        def stream(path):
+            def gen():
+                if path in bad:
+                    raise RuntimeError(f"corrupt {path}")
+                for i in range(3):
+                    yield (path, i)
+            return gen()
+        return stream
+
+    def test_healed_shard_readmitted_next_epoch(self):
+        from repro.core.dataset import ShardQuarantine
+
+        bad = {"s1"}
+        q = ShardQuarantine()
+        ds = (Dataset.from_tensor_slices(["s0", "s1", "s2"])
+              .interleave(self._stream_fn(bad), cycle_length=2,
+                          num_parallel_calls=2, quarantine=q)
+              .ignore_errors())
+        ep1 = list(ds)
+        assert {p for p, _ in ep1} == {"s0", "s2"}
+        assert q.quarantined() == ["s1"] and len(q) == 1
+
+        # epoch 2, still bad: the probe fails, the shard is skipped without
+        # burning its retry budget or emitting error markers
+        ep2 = list(ds)
+        assert {p for p, _ in ep2} == {"s0", "s2"}
+        assert len(q) == 1 and q.readmitted == 0
+
+        bad.clear()             # the OST failover finished
+        ep3 = list(ds)
+        assert {p for p, _ in ep3} == {"s0", "s1", "s2"}
+        assert len(ep3) == 9
+        assert len(q) == 0 and q.readmitted == 1
+
+    def test_readmission_increments_metric(self):
+        from repro import metrics
+        from repro.core.dataset import ShardQuarantine
+
+        bad = {"s0"}
+        q = ShardQuarantine()
+        ds = (Dataset.from_tensor_slices(["s0", "s1"])
+              .interleave(self._stream_fn(bad), cycle_length=2,
+                          num_parallel_calls=2, quarantine=q)
+              .ignore_errors())
+        reg = metrics.start()
+        try:
+            list(ds)
+            bad.clear()
+            list(ds)
+            counters = reg.collect()["counters"]
+            assert counters.get("pipeline.readmitted_shards") == 1
+            quarantined = sum(v for k, v in counters.items()
+                              if k.startswith("pipeline.quarantined_shards"))
+            assert quarantined == 1
+        finally:
+            metrics.stop()
+
+    def test_probe_pulls_one_record_then_reopens(self):
+        from repro.core.dataset import ShardQuarantine
+
+        pulls = []
+
+        def stream(path):
+            def gen():
+                for i in range(4):
+                    pulls.append((path, i))
+                    yield i
+            return gen()
+
+        q = ShardQuarantine()
+        q.quarantine("s0", RuntimeError("old failure"))
+        ds = (Dataset.from_tensor_slices(["s0"])
+              .interleave(stream, cycle_length=1, quarantine=q)
+              .ignore_errors())
+        out = list(ds)
+        assert out == [0, 1, 2, 3]      # full coverage after re-admission
+        # the probe pulled exactly one extra record before the real stream
+        assert len(pulls) == 5
+        assert q.readmitted == 1
+
+    def test_quarantine_via_sharded_pipeline_storage_fault(self):
+        from repro.core.dataset import ShardQuarantine
+        from repro.core.faults import FaultyStorage
+
+        with tempfile.TemporaryDirectory() as d:
+            st = NativeStorage(d)
+            paths, labels = records.write_sharded_image_dataset(
+                st, n_images=24, images_per_shard=6, mean_hw=(16, 16), seed=0)
+            # sticky=False: only the matching shard fails (a bad OST object,
+            # not a dead device)
+            faulty = FaultyStorage(st, sticky=False).fail_on(
+                paths[0], ops=("read",))
+            q = ShardQuarantine()
+
+            def epoch():
+                ds = sharded_image_pipeline(
+                    faulty, paths, labels, batch_size=6, cycle_length=2,
+                    block_length=3, num_parallel_calls=2, prefetch=0,
+                    out_hw=(8, 8), seed=3, quarantine=q)
+                return sum(len(l) for _i, l in ds)
+
+            assert epoch() == 18                    # bad shard dropped
+            assert q.quarantined() == [paths[0]]
+            faulty.heal()
+            assert epoch() == 24                    # probed, readmitted, full
+            assert len(q) == 0 and q.readmitted == 1

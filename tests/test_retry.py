@@ -242,3 +242,59 @@ class TestRetryingStorage:
             assert gave_up == 1
         finally:
             metrics.stop()
+
+
+class TestSleepHook:
+    """RetryPolicy(sleep=...): backoff waits are injectable (fig13 drives
+    them from the simulator's paced clock)."""
+
+    def test_injected_sleep_receives_jittered_backoff(self):
+        slept = []
+        pol = RetryPolicy(max_attempts=4, base_delay_s=0.05, max_delay_s=0.5,
+                          sleep=slept.append)
+        calls = {"n": 0}
+
+        def flaky():
+            calls["n"] += 1
+            if calls["n"] < 4:
+                raise TimeoutError("flaky")
+            return "ok"
+
+        t0 = time.monotonic()
+        assert retry_call(pol, flaky) == "ok"
+        assert time.monotonic() - t0 < 0.05     # nothing actually slept
+        assert len(slept) == 3
+        for i, d in enumerate(slept):
+            assert 0.0 <= d <= min(0.5, 0.05 * 2 ** i)
+
+    def test_default_sleep_is_time_sleep(self):
+        assert RetryPolicy().sleep is time.sleep
+
+    def test_paced_sleep_runs_on_scaled_clock(self):
+        import tempfile
+
+        from repro.core.storage import SimulatedStorage, TIERS
+
+        with tempfile.TemporaryDirectory() as d:
+            sim = SimulatedStorage(d, TIERS["optane"], time_scale=0.01)
+            t0 = time.monotonic()
+            sim.paced_sleep(1.0)        # 1 s modelled -> 10 ms wall
+            assert time.monotonic() - t0 < 0.5
+
+    def test_retrying_storage_with_paced_backoff(self, tmp_storage):
+        import tempfile as _tf
+
+        from repro.core.storage import SimulatedStorage, TIERS
+
+        with _tf.TemporaryDirectory() as d:
+            sim = SimulatedStorage(d, TIERS["optane"], time_scale=0.01)
+            sim.write_file("a", b"payload")
+            f = FaultyStorage(sim).transient(n_ops=2, ops=("read",))
+            pol = RetryPolicy(max_attempts=5, base_delay_s=0.2,
+                              max_delay_s=0.2, sleep=sim.paced_sleep)
+            rs = RetryingStorage(f, pol)
+            t0 = time.monotonic()
+            assert rs.read_file("a") == b"payload"
+            # two retries of <=0.2 s modelled backoff -> milliseconds wall
+            assert time.monotonic() - t0 < 1.0
+            assert rs.retries == 2
