@@ -43,13 +43,16 @@ REPORTS_DIR = os.environ.get("REPRO_BENCH_DIR", "reports")
 # (fig12) is a ratio in [0, 1] — fraction of direct-checkpoint blocked
 # time the async burst buffer eliminates — so "higher is better" holds,
 # and likewise goodput_frac (fig13: faulty/clean throughput under the
-# retry layer; recover_s is lower-is-better and deliberately ungated),
-# warm_speedup (fig14: warm-epoch / cold-epoch throughput through the
-# block cache), and the overlap family (fig6: prefetch overlap gains —
-# matched by prefix, covering overlap_gain / overlap_excess variants).
+# retry layer, and fig15: compute over compute + preemption overhead;
+# recover_s is lower-is-better and deliberately ungated — fig15 gates its
+# reciprocal recovery_per_s instead), warm_speedup (fig14: warm-epoch /
+# cold-epoch throughput through the block cache), and the overlap family
+# (fig6: prefetch overlap gains — matched by prefix, covering
+# overlap_gain / overlap_excess variants).
 GATED_LEAVES = ("samples_per_s", "bytes_per_s", "speedup",
                 "speedup_sharded_vs_legacy", "steps_per_s",
-                "blocked_frac_saved", "goodput_frac", "warm_speedup")
+                "blocked_frac_saved", "goodput_frac", "warm_speedup",
+                "recovery_per_s")
 GATED_LEAF_PREFIXES = ("overlap",)
 
 DEFAULT_TOLERANCE = 0.25

@@ -13,7 +13,7 @@ import time
 sys.path.insert(0, "src")
 
 ALL = ["table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
-       "fig11", "fig12", "fig13", "fig14", "roofline"]
+       "fig11", "fig12", "fig13", "fig14", "fig15", "roofline"]
 
 
 def main() -> None:
@@ -23,13 +23,14 @@ def main() -> None:
     from . import (fig4_threads, fig5_read_only, fig6_prefetch,
                    fig7_batchsize, fig8_trace, fig9_checkpoint,
                    fig10_async_ckpt, fig11_pipeline, fig12_async_bb,
-                   fig13_recovery, fig14_cache, roofline_table, table1_ior)
+                   fig13_recovery, fig14_cache, fig15_preemption,
+                   roofline_table, table1_ior)
     mods = dict(table1=table1_ior, fig4=fig4_threads, fig5=fig5_read_only,
                 fig6=fig6_prefetch, fig7=fig7_batchsize, fig8=fig8_trace,
                 fig9=fig9_checkpoint, fig10=fig10_async_ckpt,
                 fig11=fig11_pipeline, fig12=fig12_async_bb,
                 fig13=fig13_recovery, fig14=fig14_cache,
-                roofline=roofline_table)
+                fig15=fig15_preemption, roofline=roofline_table)
     for name in which:
         t0 = time.monotonic()
         print(f"# --- {name} ---", flush=True)

@@ -23,6 +23,19 @@ rerun regenerates identical data::
         --ckpt /tmp/alexckpt --steps 8
     PYTHONPATH=src python examples/alexnet_miniapp.py \\
         --ckpt /tmp/alexckpt --resume --steps 8
+
+``--ckpt-engine direct|async|bb|asyncbb`` picks the checkpoint engine the
+manager drives (the fused lifecycle: async engines overlap the save with
+training; bb/asyncbb stage through a fast buffer under DIR first).
+``--preempt-at N`` demos graceful preemption: at step N the trainer stops,
+promotes the final save within ``--preempt-deadline`` seconds, and prints
+the preemption report; rerun with ``--resume`` to restart exactly there::
+
+    PYTHONPATH=src python examples/alexnet_miniapp.py \\
+        --ckpt /tmp/alexckpt --ckpt-engine asyncbb --ckpt-every 2 \\
+        --steps 8 --preempt-at 5
+    PYTHONPATH=src python examples/alexnet_miniapp.py \\
+        --ckpt /tmp/alexckpt --ckpt-engine asyncbb --resume --steps 8
 """
 import argparse, os, sys, tempfile
 sys.path.insert(0, "src")
@@ -65,12 +78,26 @@ def main():
                          "corruption-aware restore)")
     ap.add_argument("--ckpt-every", type=int, default=5,
                     help="save every N steps (with --ckpt; default 5)")
+    ap.add_argument("--ckpt-engine", default="direct",
+                    choices=("direct", "async", "bb", "asyncbb"),
+                    help="checkpoint engine the manager drives (with "
+                         "--ckpt; bb/asyncbb stage through a fast buffer "
+                         "under DIR)")
     ap.add_argument("--resume", action="store_true",
                     help="restore the newest valid checkpoint from --ckpt "
                          "and continue — params and input position")
+    ap.add_argument("--preempt-at", type=int, default=None, metavar="STEP",
+                    help="demo graceful preemption: stop at STEP, promote "
+                         "the final save within the deadline, print the "
+                         "preemption report (requires --ckpt)")
+    ap.add_argument("--preempt-deadline", type=float, default=5.0,
+                    help="graceful-shutdown budget in seconds (with "
+                         "--preempt-at; default 5)")
     args = ap.parse_args()
     if args.resume and not args.ckpt:
         ap.error("--resume requires --ckpt DIR")
+    if args.preempt_at is not None and not args.ckpt:
+        ap.error("--preempt-at requires --ckpt DIR")
 
     tracer = IOTracer(0.25)
     st = make_storage(args.tier, tempfile.mkdtemp(), tracer, time_scale=0.2)
@@ -103,8 +130,15 @@ def main():
         # shuffled by a per-epoch seed the factory can replay on restore
         ds = ResumableIterator(lambda ep: build_pipeline(seed=ep,
                                                          repeat=False))
+        # bb/asyncbb stage through a fast buffer inside the checkpoint dir
+        # (persists across restarts: a staged-not-drained step is still
+        # restorable after a preemption)
+        fast = (make_storage("native", os.path.join(args.ckpt, "fastbuf"))
+                if args.ckpt_engine in ("bb", "asyncbb") else None)
         ckpt_mgr = CheckpointManager(make_storage("native", args.ckpt),
-                                     "ckpt/alexnet", keep_last=3)
+                                     "ckpt/alexnet", keep_last=3,
+                                     engine=args.ckpt_engine,
+                                     fast_storage=fast)
     else:
         ds = build_pipeline(repeat=True)
 
@@ -129,7 +163,13 @@ def main():
         stall = metrics.StallDetector(min_samples=4)
     tr = Trainer(train_step, state, iter(ds), stall_detector=stall,
                  checkpointer=ckpt_mgr, ckpt_every=args.ckpt_every,
-                 resume=args.resume)
+                 resume=args.resume,
+                 preempt_deadline_s=args.preempt_deadline)
+    if args.preempt_at is not None:
+        def _maybe_preempt(step, _m, _tr=tr, _at=args.preempt_at):
+            if step >= _at:
+                _tr.preempt()
+        tr.on_step = _maybe_preempt
     if args.resume:
         if tr.recovered_step is not None:
             pos = ds.state()
@@ -141,8 +181,17 @@ def main():
             print(f"--resume: no valid checkpoint under {args.ckpt}; "
                   f"starting fresh")
     tr.run(args.steps)
+    if ckpt_mgr is not None:
+        tr.wait_for_checkpoints()  # drain async saves before reporting
+        ckpt_mgr.close()
     tr.close()  # repeat() pipeline: stop the prefetch producer promptly
     rep = tr.report()
+    if rep["preemption"] is not None:
+        p = rep["preemption"]
+        print(f"preempted: committed step {p['committed_step']} in "
+              f"{p['preempt_s']:.3f}s (deadline {p['deadline_s']}s, "
+              f"met={p['deadline_met']}, abandoned={p['abandoned_steps']}) "
+              f"— rerun with --resume to restart there")
     print(f"tier={args.tier} threads={args.threads} prefetch={args.prefetch}"
           f" sharded={args.sharded}")
     print(f"  data-wait fraction: {rep['data_wait_frac']:.1%} "

@@ -52,14 +52,16 @@ tf-Darshan-style subsystem.  Tracing is off by default; call
 """
 from .cache import BlockCache, CachingStorage, ReadaheadScheduler
 from .dataset import (Dataset, ResumableIterator, ShardQuarantine,
-                      image_pipeline, sharded_image_pipeline)
+                      image_pipeline, interleave_order,
+                      sharded_image_pipeline, sharded_record_dataset)
 from .prefetcher import PrefetchIterator, prefetch_to_device
 from .readerpool import ReaderPool, reader_pool
 from .storage import Storage, NativeStorage, SimulatedStorage, TIERS, make_storage
-from .checkpoint import CheckpointSaver
+from .checkpoint import CheckpointSaver, PreemptionReport
 from .async_checkpoint import AsyncCheckpointer, AsyncSaveHandle
 from .async_burst_buffer import AsyncBurstBufferCheckpointer
-from .burst_buffer import BurstBufferCheckpointer, DirectCheckpointer
+from .burst_buffer import (BurstBufferCheckpointer, DirectCheckpointer,
+                           DrainStallError)
 from .faults import FaultInjected, FaultyStorage, TransientFault
 from .retry import RetryPolicy, RetryingStorage
 from .recovery import CheckpointManager, ResumeResult, latest_valid_step, \
@@ -68,13 +70,13 @@ from .stats import IOTracer, StepTimer
 
 __all__ = [
     "Dataset", "ResumableIterator", "ShardQuarantine", "image_pipeline",
-    "sharded_image_pipeline",
+    "interleave_order", "sharded_image_pipeline", "sharded_record_dataset",
     "BlockCache", "CachingStorage", "ReadaheadScheduler",
     "PrefetchIterator", "prefetch_to_device", "ReaderPool", "reader_pool",
     "Storage", "NativeStorage", "SimulatedStorage", "TIERS", "make_storage",
-    "CheckpointSaver", "AsyncCheckpointer", "AsyncSaveHandle",
-    "AsyncBurstBufferCheckpointer",
-    "BurstBufferCheckpointer", "DirectCheckpointer",
+    "CheckpointSaver", "PreemptionReport", "AsyncCheckpointer",
+    "AsyncSaveHandle", "AsyncBurstBufferCheckpointer",
+    "BurstBufferCheckpointer", "DirectCheckpointer", "DrainStallError",
     "FaultInjected", "FaultyStorage", "TransientFault",
     "RetryPolicy", "RetryingStorage",
     "CheckpointManager", "ResumeResult", "latest_valid_step", "validate_step",

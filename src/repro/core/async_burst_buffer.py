@@ -38,9 +38,10 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Any, List, Optional
 
 from .. import metrics, trace
-from .async_checkpoint import AsyncSaveHandle, _any_error_delivered
+from .async_checkpoint import AsyncSaveHandle, _any_error_delivered, \
+    _cancel_and_promote
 from .burst_buffer import BurstBufferCheckpointer
-from .checkpoint import SaveResult, flatten_pytree
+from .checkpoint import PreemptionReport, SaveResult, flatten_pytree
 
 
 class AsyncBurstBufferCheckpointer(BurstBufferCheckpointer):
@@ -72,6 +73,9 @@ class AsyncBurstBufferCheckpointer(BurstBufferCheckpointer):
              extra_meta: Optional[dict] = None) -> AsyncSaveHandle:
         if self._stager is None:
             raise RuntimeError("AsyncBurstBufferCheckpointer is closed")
+        if self._preempted:
+            raise RuntimeError(
+                "save() on a preempted AsyncBurstBufferCheckpointer")
         m = metrics.enabled()
         t0 = time.monotonic()
         self._sema.acquire()  # backpressure: at most max_pending snapshots
@@ -95,11 +99,12 @@ class AsyncBurstBufferCheckpointer(BurstBufferCheckpointer):
         self.blocked_s.append(blocked)
         if m:
             metrics.observe("ckpt.blocked_s", blocked, ckpt=self.prefix)
-        handle = AsyncSaveHandle(step, fut, blocked)
+        handle = AsyncSaveHandle(step, fut, blocked, metrics_flag=m)
         self._stage_handles = [
             h for h in self._stage_handles
             if not h.done()
-            or (not h._reported and h._future.exception() is not None)
+            or (not h._future.cancelled() and not h._reported
+                and h._future.exception() is not None)
         ]
         self._stage_handles.append(handle)
         return handle
@@ -121,6 +126,9 @@ class AsyncBurstBufferCheckpointer(BurstBufferCheckpointer):
                                 ckpt=self.prefix)
                 metrics.add_gauge("ckpt.drain_backlog_bytes", r.n_bytes,
                                   ckpt=self.prefix)
+            if self.on_staged is not None:
+                # fast-tier commit: the step is now preemption-durable
+                self.on_staged(step)
             self._enqueue_drain(step, r, m)
             return r
         finally:
@@ -147,6 +155,21 @@ class AsyncBurstBufferCheckpointer(BurstBufferCheckpointer):
         errors.extend(self._take_errors())
         if errors:
             raise errors[0]
+
+    def preempt(self, deadline_s: Optional[float] = None) -> PreemptionReport:
+        """Graceful shutdown within a budget: stop accepting saves, cancel
+        queued-but-unstarted stages except the newest, and wait up to
+        ``deadline_s`` for that newest snapshot to commit on the **fast
+        tier** (the preemption-durability point — slow-tier drains of
+        already-staged steps keep running in the background and are never
+        abandoned)."""
+        t0 = time.monotonic()
+        self._preempted = True
+        abandoned, met = _cancel_and_promote(
+            list(self._stage_handles), self._sema, self.prefix, deadline_s,
+            t0)
+        return PreemptionReport(self.latest_step(), abandoned, deadline_s,
+                                time.monotonic() - t0, met)
 
     def close(self) -> None:
         """Drain the stager, stop the drain thread, surface the first

@@ -36,10 +36,12 @@ from __future__ import annotations
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, List, Optional
+from concurrent.futures import TimeoutError as FutureTimeout
+from typing import Any, Callable, List, Optional
 
 from .. import metrics, trace
-from .checkpoint import CheckpointSaver, SaveResult, flatten_pytree
+from .checkpoint import CheckpointSaver, PreemptionReport, SaveResult, \
+    flatten_pytree
 
 
 class AsyncSaveHandle:
@@ -58,15 +60,24 @@ class AsyncSaveHandle:
     dropped: an error nobody observed is re-raised by ``close()``.
     """
 
-    def __init__(self, step: int, future, snapshot_s: float):
+    def __init__(self, step: int, future, snapshot_s: float,
+                 metrics_flag: bool = False):
         self.step = step
         self.snapshot_s = snapshot_s
         self._future = future
         self._observed = False   # seen via result()/exception()
         self._reported = False   # raised by wait()/close()
+        # save-time metrics.enabled() flag: a preempt() that cancels this
+        # handle decrements the pending_saves gauge iff it was incremented
+        self._metrics_flag = metrics_flag
 
     def done(self) -> bool:
         return self._future.done()
+
+    def cancelled(self) -> bool:
+        """True if a ``preempt()`` cancelled this save before it touched
+        storage (the snapshot was abandoned — nothing landed, no error)."""
+        return self._future.cancelled()
 
     def result(self, timeout: Optional[float] = None) -> SaveResult:
         """Block until the background write commits; re-raises its error."""
@@ -85,13 +96,16 @@ class AsyncSaveHandle:
     def _unreported_error(self):
         """Settled-with-error and never seen by anyone (no blocking, no
         marking) — what ``close()`` must surface."""
-        if not self._future.done() or self._reported or self._observed:
+        if not self._future.done() or self._reported or self._observed \
+                or self._future.cancelled():
             return None
         return self._future.exception()
 
     def _drain_error(self):
         """Blocking: the error ``wait()`` owes the caller (not yet raised
         by a drain call), marking it reported."""
+        if self._future.cancelled():  # abandoned by preempt(): no error owed
+            return None
         e = self._future.exception()
         if e is None or self._reported:
             return None
@@ -108,9 +122,50 @@ def _any_error_delivered(handles) -> bool:
     caller (observed via the handle, or raised by a drain call)."""
     return any(
         (h._observed or h._reported)
-        and h._future.done() and h._future.exception() is not None
+        and h._future.done() and not h._future.cancelled()
+        and h._future.exception() is not None
         for h in handles
     )
+
+
+def _cancel_and_promote(handles, sema, prefix: str,
+                        deadline_s: Optional[float], t0: float):
+    """Shared preemption core for the async engines: cancel every queued
+    (not-yet-started) save except the newest, then wait for the newest to
+    commit within what remains of the deadline.
+
+    Returns ``(abandoned_steps, deadline_met)``.  A successfully cancelled
+    save never ran its writer, so its backpressure slot and pending-saves
+    gauge entry are released here (symmetric with the save-time acquire).
+    The newest save is *promoted*: it gets the whole remaining budget; on
+    timeout it is reported abandoned but left running — if it settles after
+    the process survives anyway, the step is durable as normal."""
+    abandoned: List[int] = []
+    live = [h for h in handles if not h.done()]
+    newest = live[-1] if live else None
+    for h in live[:-1]:
+        if h._future.cancel():
+            abandoned.append(h.step)
+            sema.release()
+            if h._metrics_flag:
+                metrics.add_gauge("ckpt.pending_saves", -1, ckpt=prefix)
+    deadline_met = True
+    if newest is not None:
+        remaining = None
+        if deadline_s is not None:
+            remaining = max(0.0, deadline_s - (time.monotonic() - t0))
+        try:
+            e = newest._future.exception(remaining)
+        except FutureTimeout:
+            abandoned.append(newest.step)
+            deadline_met = False
+        else:
+            if e is not None:
+                # failed, not slow: the step is not durable.  The error
+                # itself still surfaces through the handle/wait()/close()
+                # contract — preempt() only records the abandonment.
+                abandoned.append(newest.step)
+    return sorted(abandoned), deadline_met
 
 
 class AsyncCheckpointer:
@@ -142,6 +197,10 @@ class AsyncCheckpointer:
         self.prefix = prefix
         self.blocked_s: List[float] = []
         self._handles: List[AsyncSaveHandle] = []
+        self._preempted = False
+        #: Lifecycle hook (used by the fused CheckpointManager): called with
+        #: the step number on the writer thread after the step committed.
+        self.on_committed: Optional[Callable[[int], None]] = None
         self._sema = threading.BoundedSemaphore(max(1, max_pending))
         # One writer thread: checkpoints commit in submission order, so the
         # marker's `latest` is always the newest fully-landed step.
@@ -154,6 +213,8 @@ class AsyncCheckpointer:
              extra_meta: Optional[dict] = None) -> AsyncSaveHandle:
         if self._executor is None:
             raise RuntimeError("AsyncCheckpointer is closed")
+        if self._preempted:
+            raise RuntimeError("save() on a preempted AsyncCheckpointer")
         m = metrics.enabled()
         t0 = time.monotonic()
         self._sema.acquire()  # backpressure: at most max_pending snapshots
@@ -177,13 +238,14 @@ class AsyncCheckpointer:
         self.blocked_s.append(blocked)
         if m:
             metrics.observe("ckpt.blocked_s", blocked, ckpt=self.prefix)
-        handle = AsyncSaveHandle(step, fut, blocked)
+        handle = AsyncSaveHandle(step, fut, blocked, metrics_flag=m)
         # keep only unsettled and failed-but-not-yet-drain-reported handles:
         # the list must not grow with run length
         self._handles = [
             h for h in self._handles
             if not h.done()
-            or (not h._reported and h._future.exception() is not None)
+            or (not h._future.cancelled() and not h._reported
+                and h._future.exception() is not None)
         ]
         self._handles.append(handle)
         return handle
@@ -198,6 +260,10 @@ class AsyncCheckpointer:
                 metrics.observe("ckpt.write_s", time.monotonic() - t0,
                                 ckpt=self.prefix)
                 metrics.inc("ckpt.saves", 1, ckpt=self.prefix)
+            if self.on_committed is not None:
+                # commit hook: the fused manager runs deferred retention/GC
+                # here, on the (single) writer thread, after the marker moved
+                self.on_committed(step)
             return res
         finally:
             self._sema.release()
@@ -222,6 +288,18 @@ class AsyncCheckpointer:
 
     def pending(self) -> int:
         return sum(1 for h in self._handles if not h.done())
+
+    def preempt(self, deadline_s: Optional[float] = None) -> PreemptionReport:
+        """Graceful shutdown within a budget: stop accepting saves, cancel
+        queued-but-unstarted writes except the newest, and wait up to
+        ``deadline_s`` (``None`` = forever) for that newest write to
+        commit.  Returns what was promoted vs abandoned."""
+        t0 = time.monotonic()
+        self._preempted = True
+        abandoned, met = _cancel_and_promote(
+            list(self._handles), self._sema, self.prefix, deadline_s, t0)
+        return PreemptionReport(self.latest_step(), abandoned, deadline_s,
+                                time.monotonic() - t0, met)
 
     def close(self, wait: bool = True) -> None:
         """Shut the writer down; surface (not silently drop) a background

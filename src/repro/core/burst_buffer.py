@@ -35,13 +35,21 @@ from __future__ import annotations
 import queue
 import threading
 import time
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Any, List, Optional, Tuple
+from typing import Any, Callable, List, Optional, Tuple
 
 from .. import metrics, trace
-from .checkpoint import CheckpointSaver, SaveResult, CHECKPOINT_MARKER, \
-    write_marker
+from .checkpoint import CheckpointSaver, PreemptionReport, SaveResult, \
+    CHECKPOINT_MARKER, write_marker
+
+
+class DrainStallError(RuntimeError):
+    """A drain chunk stalled past the watchdog timeout on every attempt
+    (initial + ``drain_requeue_limit`` re-queues).  Deliberately *not* an
+    OSError: the watchdog re-queue is itself the retry mechanism — this
+    surfacing means the slow tier is wedged, not flaky."""
 
 
 @dataclass
@@ -74,10 +82,13 @@ class DirectCheckpointer:
         )
         self.blocked_s: List[float] = []
         self._closed = False
+        self._preempted = False
 
     def save(self, step: int, tree: Any, extra_meta: Optional[dict] = None) -> SaveResult:
         if self._closed:
             raise RuntimeError("save() on a closed DirectCheckpointer")
+        if self._preempted:
+            raise RuntimeError("save() on a preempted DirectCheckpointer")
         r = self.saver.save(step, tree, extra_meta)
         self.blocked_s.append(r.seconds)
         return r
@@ -93,6 +104,13 @@ class DirectCheckpointer:
 
     def wait(self) -> None:  # interface parity: nothing in flight, no error
         return
+
+    def preempt(self, deadline_s: Optional[float] = None) -> PreemptionReport:
+        """Graceful shutdown: stop accepting saves.  Every completed save
+        was synchronous, so the newest step is already durable — nothing is
+        in flight to promote or abandon and the deadline is trivially met."""
+        self._preempted = True
+        return PreemptionReport(self.latest_step(), [], deadline_s, 0.0, True)
 
     def close(self) -> None:
         self._closed = True  # idempotent; later save() raises
@@ -116,6 +134,8 @@ class BurstBufferCheckpointer:
         io_threads: Optional[int] = None,
         drain_streams: int = 4,
         drain_chunk: int = 8 << 20,
+        drain_stall_timeout: Optional[float] = None,
+        drain_requeue_limit: int = 3,
     ):
         self.fast = fast_storage
         self.slow = slow_storage
@@ -125,6 +145,20 @@ class BurstBufferCheckpointer:
         self.drain_async = drain_async
         self.drain_streams = max(1, drain_streams)
         self.drain_chunk = drain_chunk
+        #: Watchdog: a drain stream whose current chunk shows no heartbeat
+        #: for this many seconds is aborted, its chunk re-queued on a fresh
+        #: stream (``None`` disables).  Tune it above the worst-case single
+        #: chunk transfer time, or healthy slow chunks get falsely aborted.
+        self.drain_stall_timeout = drain_stall_timeout
+        self.drain_requeue_limit = max(0, drain_requeue_limit)
+        self.drain_stalls = 0   # stall events the watchdog detected
+        self.drain_aborts = 0   # streams it gave up on (leaked until unwedged)
+        #: Lifecycle hooks (used by the fused CheckpointManager): called with
+        #: the step number after the fast-tier commit / after the slow-tier
+        #: marker publish + cleanup.  They run on engine background threads.
+        self.on_staged: Optional[Callable[[int], None]] = None
+        self.on_drained: Optional[Callable[[int], None]] = None
+        self._preempted = False
         self.fast_saver = CheckpointSaver(
             fast_storage, prefix, keep=keep, n_shards=n_shards, sync=sync,
             quantize=quantize, io_threads=io_threads,
@@ -146,6 +180,8 @@ class BurstBufferCheckpointer:
 
     # -- producer (training thread) --------------------------------------------
     def save(self, step: int, tree: Any, extra_meta: Optional[dict] = None) -> SaveResult:
+        if self._preempted:
+            raise RuntimeError("save() on a preempted BurstBufferCheckpointer")
         r = self.fast_saver.save(step, tree, extra_meta)
         self.blocked_s.append(r.seconds)  # only the fast-tier write blocks
         m = metrics.enabled()
@@ -153,6 +189,8 @@ class BurstBufferCheckpointer:
             metrics.observe("ckpt.staged_s", r.seconds, ckpt=self.prefix)
             metrics.add_gauge("ckpt.drain_backlog_bytes", r.n_bytes,
                               ckpt=self.prefix)
+        if self.on_staged is not None:
+            self.on_staged(step)
         self._enqueue_drain(step, r, m)
         return r
 
@@ -221,18 +259,7 @@ class BurstBufferCheckpointer:
         # data writes are not individually synced: the marker write below
         # is the durability barrier.
         tasks = self._range_tasks(files)
-        if self.drain_streams > 1 and len(tasks) > 1:
-            with ThreadPoolExecutor(
-                min(self.drain_streams, len(tasks)),
-                thread_name_prefix="bb-drain",
-            ) as pool:
-                futs = [pool.submit(self._drain_range, path, off, length)
-                        for path, off, length in tasks]
-                for f in futs:
-                    f.result()
-        else:
-            for path, off, length in tasks:
-                self._drain_range(path, off, length)
+        self._run_drain_tasks(tasks)
         # slow-tier commit marker after all files landed — written durably
         # (sync=True barrier) via tmp+rename: the marker is the commit
         # point, so it must never become durable before the data it
@@ -277,6 +304,142 @@ class BurstBufferCheckpointer:
         if m:
             metrics.add_gauge("ckpt.drain_backlog_bytes", -n_bytes,
                               ckpt=self.prefix)
+        if self.on_drained is not None:
+            # drain commit: the step is durable on the slow tier — the fused
+            # manager runs its deferred retention/GC from this hook (on the
+            # drain thread, so GC is serialized with marker publishes)
+            self.on_drained(step)
+
+    def _run_drain_tasks(self, tasks: List[Tuple[str, int, int]]) -> None:
+        """Stream all chunk ranges of a step to the slow tier.
+
+        Without a stall timeout this is the plain multi-stream pool; with
+        one, each stream carries a heartbeat and a watchdog supervises it
+        (:meth:`_run_drain_tasks_watchdog`)."""
+        if self.drain_streams <= 1 or len(tasks) <= 1:
+            for path, off, length in tasks:
+                self._drain_range(path, off, length)
+        elif self.drain_stall_timeout is None:
+            with ThreadPoolExecutor(
+                min(self.drain_streams, len(tasks)),
+                thread_name_prefix="bb-drain",
+            ) as pool:
+                futs = [pool.submit(self._drain_range, path, off, length)
+                        for path, off, length in tasks]
+                for f in futs:
+                    f.result()
+        else:
+            self._run_drain_tasks_watchdog(tasks)
+
+    def _run_drain_tasks_watchdog(self, tasks: List[Tuple[str, int, int]]) -> None:
+        """Watchdog-supervised multi-stream drain.
+
+        Streams pull chunks from a shared queue, recording a heartbeat
+        (chunk + claim time) before each transfer.  The coordinator (the
+        drain thread) polls at ``stall_timeout / 4``: a stream whose chunk
+        has shown no progress past the timeout is **aborted** — marked
+        dead, its chunk re-queued, and a replacement stream spawned — so a
+        single wedged slow-tier op delays the drain by at most ~one timeout
+        instead of hanging ``wait()`` forever.  Aborted streams are daemon
+        threads left parked inside the stuck op (a thread blocked in a
+        syscall cannot be killed); if the op ever completes, the duplicate
+        chunk write is byte-identical and harmless.  A chunk that stalls on
+        every attempt (initial + ``drain_requeue_limit`` re-queues) raises
+        :class:`DrainStallError` through the normal drain-error path."""
+        timeout = self.drain_stall_timeout
+        n_tasks = len(tasks)
+        cond = threading.Condition()
+        pending: deque = deque((i, 0) for i in range(n_tasks))  # (idx, tries)
+        done: set = set()
+        claims: dict = {}    # stream id -> (task idx, tries, heartbeat time)
+        dead: set = set()    # streams the watchdog gave up on
+        errors: List[BaseException] = []
+        threads: dict = {}
+        next_sid = [0]
+
+        def finished() -> bool:
+            return len(done) >= n_tasks or bool(errors)
+
+        def stream(sid: int) -> None:
+            while True:
+                with cond:
+                    while True:
+                        if finished() or sid in dead:
+                            return
+                        if pending:
+                            idx, tries = pending.popleft()
+                            if idx in done:  # a leaked duplicate landed it
+                                continue
+                            claims[sid] = (idx, tries, time.monotonic())
+                            break
+                        cond.wait(min(timeout / 4.0, 0.05))
+                path, off, length = tasks[idx]
+                try:
+                    self._drain_range(path, off, length)
+                except BaseException as e:
+                    with cond:
+                        claims.pop(sid, None)
+                        if sid not in dead:  # an abandoned stream's error
+                            errors.append(e)  # belongs to its re-queued copy
+                        cond.notify_all()
+                    return
+                with cond:
+                    claims.pop(sid, None)
+                    done.add(idx)
+                    cond.notify_all()
+                    if sid in dead:
+                        return
+
+        def spawn() -> None:
+            sid = next_sid[0]
+            next_sid[0] += 1
+            t = threading.Thread(target=stream, args=(sid,),
+                                 name=f"bb-drain-{sid}", daemon=True)
+            threads[sid] = t
+            t.start()
+
+        for _ in range(min(self.drain_streams, n_tasks)):
+            spawn()
+
+        with cond:
+            while not finished():
+                cond.wait(min(timeout / 4.0, 0.05))
+                now = time.monotonic()
+                for sid, (idx, tries, hb) in list(claims.items()):
+                    if now - hb <= timeout:
+                        continue
+                    # stall: abort the stream, re-queue its chunk
+                    dead.add(sid)
+                    claims.pop(sid)
+                    self.drain_stalls += 1
+                    self.drain_aborts += 1
+                    if metrics.enabled():
+                        metrics.inc("ckpt.drain_stalls", 1, ckpt=self.prefix)
+                        metrics.inc("ckpt.drain_aborts", 1, ckpt=self.prefix)
+                    path, off, length = tasks[idx]
+                    if tries >= self.drain_requeue_limit:
+                        errors.append(DrainStallError(
+                            f"drain chunk {path!r}@{off}+{length} stalled "
+                            f"past {timeout}s on {tries + 1} attempts "
+                            f"(requeue limit {self.drain_requeue_limit})"))
+                    else:
+                        pending.append((idx, tries + 1))
+                        spawn()
+                cond.notify_all()
+            cond.notify_all()
+        for sid, t in threads.items():
+            if sid not in dead:  # dead streams stay parked in the stuck op
+                t.join(timeout=timeout + 1.0)
+        if errors:
+            raise errors[0]
+
+    def preempt(self, deadline_s: Optional[float] = None) -> PreemptionReport:
+        """Graceful shutdown: stop accepting saves.  ``save()`` blocks
+        through the fast-tier commit, so everything saved is already
+        durable at the preemption tier; background drains keep running
+        (they copy already-durable steps, nothing is abandoned)."""
+        self._preempted = True
+        return PreemptionReport(self.latest_step(), [], deadline_s, 0.0, True)
 
     def _slow_steps(self) -> List[int]:
         import json

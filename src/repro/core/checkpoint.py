@@ -179,6 +179,24 @@ class SaveResult:
     files: List[str]
 
 
+@dataclass
+class PreemptionReport:
+    """Outcome of a graceful-shutdown ``preempt(deadline_s)`` call.
+
+    ``committed_step`` is the newest step durable at the engine's
+    preemption tier (the fast tier for the burst buffers) when the call
+    returned; ``abandoned_steps`` are saves given up to meet the deadline —
+    queued snapshots that were cancelled before touching storage, plus the
+    newest in-flight save if it missed the budget.  ``deadline_met`` is
+    False only in that last case."""
+
+    committed_step: Optional[int]
+    abandoned_steps: List[int]
+    deadline_s: Optional[float]
+    elapsed_s: float
+    deadline_met: bool
+
+
 class CheckpointSaver:
     """TF-Saver-like sharded checkpointer over a :class:`Storage`.
 

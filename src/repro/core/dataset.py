@@ -45,6 +45,7 @@ its resources immediately instead of waiting for GC.
 """
 from __future__ import annotations
 
+import inspect
 import itertools
 import random
 import threading
@@ -734,6 +735,131 @@ class Dataset:
         return list(self)
 
 
+def _accepts_start(factory: Callable) -> bool:
+    """True if ``factory`` can be called as ``factory(epoch, start)`` —
+    the seekable-pipeline contract of :class:`ResumableIterator`."""
+    try:
+        sig = inspect.signature(factory)
+    except (TypeError, ValueError):
+        return False
+    params = list(sig.parameters.values())
+    if any(p.kind is p.VAR_POSITIONAL for p in params):
+        return True
+    positional = [p for p in params
+                  if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
+    if len(positional) >= 2:
+        return True
+    return any(p.name == "start" and p.kind is p.KEYWORD_ONLY
+               for p in params)
+
+
+def interleave_order(counts: Sequence[int], cycle_length: int = 4,
+                     block_length: int = 1) -> List[tuple]:
+    """Arithmetic replica of :meth:`Dataset.interleave` delivery order.
+
+    Given per-source element ``counts`` (sources in upstream order),
+    returns the exact global delivery order as ``(source_index,
+    element_index)`` pairs — the order the real interleave produces when
+    every sub-stream is error-free.  Zero I/O: this is how a seekable
+    pipeline (:func:`sharded_record_dataset`) converts a flat resume
+    offset into per-shard read positions.
+
+    Faithful to one subtlety of the real operator: exhaustion is only
+    observed on ``StopIteration``, so a source whose remaining count is an
+    exact ``block_length`` multiple is re-appended after its last full
+    block and occupies one extra (empty) cycle turn before retiring.
+    """
+    if cycle_length < 1:
+        raise ValueError(f"cycle_length must be >= 1, got {cycle_length}")
+    if block_length < 1:
+        raise ValueError(f"block_length must be >= 1, got {block_length}")
+    order: List[tuple] = []
+    remaining = [int(c) for c in counts]
+    pos = [0] * len(remaining)
+    cycle: deque = deque()
+    nxt = 0
+    while True:
+        while len(cycle) < cycle_length and nxt < len(remaining):
+            cycle.append(nxt)
+            nxt += 1
+        if not cycle:
+            return order
+        s = cycle.popleft()
+        take = min(block_length, remaining[s])
+        for _ in range(take):
+            order.append((s, pos[s]))
+            pos[s] += 1
+        remaining[s] -= take
+        if take == block_length:
+            # a full block: StopIteration not yet observed — the slot stays
+            # in the cycle even if it is now empty (one extra empty turn)
+            cycle.append(s)
+
+
+def sharded_record_dataset(storage, paths: Sequence[str], rec_bytes: int, *,
+                           cycle_length: int = 4, block_length: int = 4,
+                           num_parallel_calls: int = 0, seed: int = 0,
+                           start: int = 0) -> Dataset:
+    """Interleaved fixed-size-record shard streaming with O(1) seek.
+
+    The fig13 read-engine shape: shard paths are buffer-shuffled by
+    ``seed``, then ``cycle_length`` shards stream concurrently
+    record-by-record (``rec_bytes`` per ``read_range``, short final
+    record allowed), ``block_length`` records per cycle turn.
+
+    ``start`` positions the stream *arithmetically*: the shuffled shard
+    order is replayed over the path list (pure Python, zero I/O), record
+    counts come from ``storage.size`` (unpaced metadata), and
+    :func:`interleave_order` maps the flat offset to per-shard positions —
+    so resuming deep into an epoch costs a handful of ``size`` calls, not
+    a replay of every skipped record.  Use as a seekable
+    :class:`ResumableIterator` factory::
+
+        it = ResumableIterator(
+            lambda ep, start=0: sharded_record_dataset(
+                storage, paths, rec_bytes, seed=ep, start=start))
+
+    The two paths deliver byte-identical element sequences: the ``start``
+    path reads exactly the records the ``start=0`` interleave would have
+    delivered from that offset on, in the same order.
+    """
+    shard_order = list(
+        Dataset.from_tensor_slices(list(paths))
+        .shuffle(max(len(paths), 1), seed=seed))
+
+    if start <= 0:
+        def stream_shard(path):
+            def gen():
+                size = storage.size(path)
+                for off in range(0, size, rec_bytes):
+                    yield storage.read_range(path, off,
+                                             min(rec_bytes, size - off))
+            return gen()
+
+        return (Dataset.from_tensor_slices(list(paths))
+                .shuffle(max(len(paths), 1), seed=seed)
+                .interleave(stream_shard, cycle_length=cycle_length,
+                            block_length=block_length,
+                            num_parallel_calls=num_parallel_calls))
+
+    # seek path: rebuild the delivery order arithmetically, skip `start`
+    # entries by slicing (no data I/O), and read only the tail
+    sizes = [storage.size(p) for p in shard_order]
+    counts = [(sz + rec_bytes - 1) // rec_bytes for sz in sizes]
+    order = interleave_order(counts, cycle_length, block_length)
+
+    def gen_spans():
+        for s, i in itertools.islice(iter(order), start, None):
+            off = i * rec_bytes
+            yield (shard_order[s], off, min(rec_bytes, sizes[s] - off))
+
+    spans = Dataset(gen_spans)
+    reader = lambda t: storage.read_range(*t)  # noqa: E731
+    reader.__name__ = "read_record"
+    return spans.map(reader,
+                     num_parallel_calls=max(num_parallel_calls, 1))
+
+
 class ResumableIterator:
     """Epoch-aware iterator with a lightweight save/restore position.
 
@@ -753,6 +879,18 @@ class ResumableIterator:
     of ``prefetch`` (wrap the whole pipeline) so buffered-but-unconsumed
     elements are not counted as seen.
 
+    **O(1) seek**: a factory that also accepts a start offset —
+    ``(epoch, start) -> Dataset`` yielding epoch ``e``'s stream *from
+    element* ``start`` (e.g. built on :func:`sharded_record_dataset`,
+    which positions arithmetically instead of reading) — upgrades
+    :meth:`restore_state` from O(offset) replay to a direct seek: the
+    factory is opened at the checkpointed offset and no skipped element
+    is ever produced, so resume cost is independent of how deep into the
+    epoch the checkpoint was.  Seekability is detected from the factory's
+    signature; :meth:`state` then carries ``"seek": True`` so a restore
+    on a non-seekable pipeline of the same corpus still works (it falls
+    back to replay).
+
     Determinism caveat: skip-restore replays the pipeline's element order,
     which is deterministic for ``deterministic=True`` stages (the default);
     under ``ignore_errors`` the offset counts *surviving* elements, so a
@@ -763,8 +901,10 @@ class ResumableIterator:
     def __init__(self, source, *, epochs: Optional[int] = None):
         if isinstance(source, Dataset):
             self._factory = lambda epoch: source
+            self._seekable = False
         elif callable(source):
             self._factory = source
+            self._seekable = _accepts_start(source)
         else:
             raise TypeError(
                 f"source must be a Dataset or epoch->Dataset factory, "
@@ -778,16 +918,34 @@ class ResumableIterator:
     # -- position ----------------------------------------------------------------
     def state(self) -> dict:
         """Snapshot the position (JSON-serializable, O(1))."""
-        return {"epoch": self._epoch, "offset": self._offset, "version": 1}
+        s = {"epoch": self._epoch, "offset": self._offset, "version": 1}
+        if self._seekable:
+            s["seek"] = True
+        return s
+
+    def _open_epoch(self, epoch: int, start: int = 0) -> Iterator:
+        if start > 0 and self._seekable:
+            return iter(self._factory(epoch, start))
+        return iter(self._factory(epoch))
 
     def restore_state(self, state: dict) -> None:
-        """Re-open at ``state`` by skipping already-delivered elements."""
+        """Re-open at ``state``: a direct seek when the factory supports a
+        start offset, else by skipping already-delivered elements."""
         self.close()
         self._epoch = int(state["epoch"])
         self._offset = 0
         self._done = False
-        self._it = iter(self._factory(self._epoch))
         target = int(state["offset"])
+        if target > 0 and self._seekable:
+            # O(1) reposition: the factory opens epoch `epoch` already
+            # advanced past the first `target` elements (no replay I/O).
+            # A target beyond the epoch end yields an empty tail; the
+            # nonzero offset makes __next__ roll the epoch naturally.
+            self._it = self._open_epoch(self._epoch, target)
+            self._offset = target
+            metrics.inc("pipeline.resume_seeks")
+            return
+        self._it = self._open_epoch(self._epoch)
         with trace.span(trace.STAGE_DATA_WAIT,
                         f"resume_skip:{target}@epoch{self._epoch}"):
             for _ in range(target):
@@ -808,7 +966,7 @@ class ResumableIterator:
         if self._done:
             raise StopIteration
         if self._it is None:
-            self._it = iter(self._factory(self._epoch))
+            self._it = self._open_epoch(self._epoch)
         while True:
             try:
                 item = next(self._it)
@@ -824,7 +982,7 @@ class ResumableIterator:
                     # instead of spinning on zero-element epochs forever
                     self._done = True
                     raise
-                self._it = iter(self._factory(self._epoch))
+                self._it = self._open_epoch(self._epoch)
                 continue
             self._offset += 1
             return item

@@ -22,6 +22,16 @@ failures at exact, reproducible points:
   probability ``p`` (seeded, reproducible).  The op raises *before* any
   bytes move, so a retry is always safe.  This is the model
   :class:`repro.core.retry.RetryingStorage` exists to absorb.
+* ``hang(n_ops=k | on=substring, duration=t | forever)`` — the matching op
+  **blocks** instead of failing: the calling thread stalls inside the
+  device for ``duration`` seconds (``None`` = forever, until
+  :meth:`release_hung` / :meth:`heal`), then the op proceeds normally and
+  its bytes land.  This is the stuck-op model (a slow-tier write wedged in
+  the kernel / network stack) that drain watchdogs must detect: unlike
+  every mode above, nothing raises — the op just never returns.  One-shot
+  by default (``repeat=True`` hangs every matching op while armed);
+  ``hung_ops`` counts trips and ``hung_now`` is the number of threads
+  currently stalled.
 * ``reordered_fsync()`` — the device acknowledges writes into a volatile
   cache and is free to persist them out of order: only a ``sync=True``
   write (or ``fsync_dir``) is a durability **barrier** that flushes
@@ -98,6 +108,17 @@ class FaultyStorage(Storage):
         self._transient_ops: Sequence[str] = ()
         self._transient_rng = random.Random(0)
         self.transients_injected = 0
+        # stuck-op (hang) fault state
+        self._hang_armed = False
+        self._hang_after = 0
+        self._hang_on: Optional[str] = None
+        self._hang_ops: Sequence[str] = ()
+        self._hang_count = 0
+        self._hang_duration: Optional[float] = None
+        self._hang_repeat = False
+        self._hang_release = threading.Event()
+        self.hung_ops = 0   # total ops that tripped a hang
+        self.hung_now = 0   # threads currently stalled inside the device
         # reordered-fsync journaling: volatile (un-barriered) writes since
         # the last sync=True write / fsync_dir, with pre-images for rollback
         self._journal_mode = False
@@ -163,6 +184,37 @@ class FaultyStorage(Storage):
             self._transient_rng = random.Random(seed)
         return self
 
+    def hang(self, n_ops: int = 0, on: Optional[str] = None,
+             ops: Sequence[str] = ("write",),
+             duration: Optional[float] = None,
+             repeat: bool = False) -> "FaultyStorage":
+        """Arm a **stuck op**: after ``n_ops`` matching ops — or, with
+        ``on=substring``, at the first matching op whose path contains the
+        substring — the op blocks for ``duration`` seconds (``None`` =
+        forever, until :meth:`release_hung` or :meth:`heal`), then proceeds
+        normally (the bytes land; the device was wedged, not dead).  The
+        hang is one-shot unless ``repeat=True``."""
+        if duration is not None and duration < 0:
+            raise ValueError(f"hang duration must be >= 0, got {duration}")
+        with self._lock:
+            self._hang_armed = True
+            self._hang_after = int(n_ops)
+            self._hang_on = on
+            self._hang_ops = self._expand(ops)
+            self._hang_count = 0
+            self._hang_duration = duration
+            self._hang_repeat = bool(repeat)
+            self._hang_release = threading.Event()
+        return self
+
+    def release_hung(self) -> "FaultyStorage":
+        """Un-wedge: every thread currently stalled in a hung op resumes
+        (and completes its op).  The arming itself is untouched — pair with
+        :meth:`heal` to also disarm."""
+        with self._lock:
+            self._hang_release.set()
+        return self
+
     def reordered_fsync(self) -> "FaultyStorage":
         """Arm the volatile-cache durability model: un-barriered writes are
         journaled (with pre-images) and survive only until :meth:`crash`;
@@ -210,6 +262,8 @@ class FaultyStorage(Storage):
             self._transient_rate = 0.0
             self._transient_on = None
             self._transient_ops = ()
+            self._hang_armed = False
+            self._hang_release.set()  # un-wedge any thread still stalled
         return self
 
     @staticmethod
@@ -229,6 +283,7 @@ class FaultyStorage(Storage):
         """Count the op; raise on a clean trip.  Returns the torn fraction
         when the trip should land a partial buffer first (the caller does
         the prefix write, then raises) — ``None`` means proceed normally."""
+        self._maybe_hang(op, path)
         with self._lock:
             self.op_log.append((op, path, nbytes))
             # transient (non-sticky) faults first: a flaky device, checked
@@ -271,6 +326,33 @@ class FaultyStorage(Storage):
                         f"{self._count} ops")
                 self._count += 1
             return None
+
+    def _maybe_hang(self, op: str, path: str) -> None:
+        """Stall the calling thread if the armed hang matches this op.
+
+        The decision is taken under the lock; the wait itself must not hold
+        it (other threads keep doing I/O while one is wedged)."""
+        with self._lock:
+            if not self._hang_armed or op not in self._hang_ops:
+                return
+            if self._hang_on is not None:
+                if self._hang_on not in path:
+                    return
+            elif self._hang_count < self._hang_after:
+                self._hang_count += 1
+                return
+            if not self._hang_repeat:
+                self._hang_armed = False
+            self.hung_ops += 1
+            self.hung_now += 1
+            release = self._hang_release
+            duration = self._hang_duration
+        metrics.inc("storage.hangs_injected", 1, op=op)
+        try:
+            release.wait(timeout=duration)
+        finally:
+            with self._lock:
+                self.hung_now -= 1
 
     # -- reordered-fsync journaling -------------------------------------------
     def _pre_write(self, path: str, sync: bool) -> None:

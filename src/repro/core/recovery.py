@@ -25,27 +25,58 @@ actually work end-to-end:
   the trainer attached at save time (``extra_meta["pipeline"]``), so a
   resumed run neither skips nor replays samples.
 
+PR 10 fuses the manager with every save engine (``engine=direct|async|
+bb|asyncbb``): one lifecycle subsystem instead of "retention *or* the
+async blocked-time win".  Each step moves through explicit states —
+``SNAPSHOTTED`` (host copy taken) → ``STAGED`` (durable at the engine's
+preemption tier) → ``COMMITTED`` (durable at the final tier) — with
+retention/GC **deferred past drain commit** via engine hooks, so a step
+staged on the fast tier but not yet drained is never collected and
+``latest_valid()``/``restore()`` consult both tiers.  ``preempt(
+deadline_s)`` forwards the graceful-shutdown budget to the engine
+(promote the newest in-flight save, abandon the rest, record it).
+
 The manager implements the checkpointer interface the
 :class:`~repro.train.trainer.Trainer` expects (``save``/``latest_step``/
-``restore_pytree``/``wait``/``close``/``blocked_s``), so it can drop in
-wherever a :class:`~repro.core.burst_buffer.DirectCheckpointer` does —
-optionally with a :class:`~repro.core.retry.RetryingStorage` wrap for
-transient-fault absorption (``retry_policy=...``).
+``restore_pytree``/``wait``/``close``/``preempt``/``blocked_s``), so it
+can drop in wherever a :class:`~repro.core.burst_buffer.
+DirectCheckpointer` does — optionally with a :class:`~repro.core.retry.
+RetryingStorage` wrap for transient-fault absorption
+(``retry_policy=...``).
 """
 from __future__ import annotations
 
 import json
 import re
+import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Set, Tuple
 
-from .checkpoint import (CHECKPOINT_MARKER, CheckpointSaver, SaveResult,
-                         unflatten_pytree, write_marker)
+from .. import metrics
+from .async_burst_buffer import AsyncBurstBufferCheckpointer
+from .async_checkpoint import AsyncCheckpointer
+from .burst_buffer import BurstBufferCheckpointer, DirectCheckpointer
+from .checkpoint import (CHECKPOINT_MARKER, CheckpointSaver,
+                         PreemptionReport, SaveResult, unflatten_pytree,
+                         write_marker)
 from .retry import RetryingStorage, RetryPolicy
 
 #: Effectively-infinite retention for the inner saver: the manager owns GC.
 _NO_SAVER_GC = 1 << 30
+
+#: Per-step lifecycle states of the fused manager (monotonic order).
+SNAPSHOTTED = "SNAPSHOTTED"   # host snapshot taken; nothing on storage yet
+STAGED = "STAGED"             # durable at the engine's preemption tier
+COMMITTED = "COMMITTED"       # durable at the final (slow) tier; GC-eligible
+ABANDONED = "ABANDONED"       # given up by preempt() to meet its deadline
+_STATE_ORDER = {SNAPSHOTTED: 0, STAGED: 1, COMMITTED: 2}
+
+ENGINES = ("direct", "async", "bb", "asyncbb")
+#: How many COMMITTED entries the per-step state map keeps around (all
+#: non-committed entries are always kept — they are live lifecycle state).
+_STATE_HISTORY = 64
 
 
 def _split_prefix(prefix: str) -> Tuple[str, str]:
@@ -155,14 +186,34 @@ class ResumeResult:
 
 
 class CheckpointManager:
-    """Retention + corruption-aware restore over a sharded saver.
+    """Retention + corruption-aware restore, fused with any save engine.
 
-    ``keep_last`` newest steps are retained; ``keep_every`` additionally
-    pins every n-th step as a permanent milestone (TF's
-    ``keep_checkpoint_every_n_hours``, in steps).  The latest *valid* step
-    is always retained regardless of either rule.  ``retry_policy`` wraps
-    the storage in :class:`~repro.core.retry.RetryingStorage` so transient
-    device faults are absorbed below the checkpoint protocol.
+    ``engine`` selects the save path (all four share one commit protocol):
+
+    * ``"direct"`` (default) — synchronous sharded save to ``storage``;
+    * ``"async"`` — :class:`~repro.core.async_checkpoint.AsyncCheckpointer`
+      (snapshot-only blocking, background write);
+    * ``"bb"`` — :class:`~repro.core.burst_buffer.BurstBufferCheckpointer`
+      (stage to ``fast_storage``, background drain to ``storage``);
+    * ``"asyncbb"`` — the fused engine (snapshot-only blocking, background
+      stage *and* drain).
+
+    The manager drives every step through explicit lifecycle states
+    (:data:`SNAPSHOTTED` → :data:`STAGED` → :data:`COMMITTED`, readable via
+    :meth:`step_states`), and owns retention: ``keep_last`` newest steps
+    plus ``keep_every`` milestones, with the latest *valid* step always
+    kept.  With a background engine, GC is **deferred past drain commit** —
+    it runs from the engine's commit hook, on the engine's own thread, so a
+    step staged on the fast tier but not yet drained is never deleted and
+    stays restorable for a preemption restart.  :meth:`latest_valid` and
+    :meth:`restore` consult **both tiers** (fast preferred: it holds the
+    newest data and reads faster).
+
+    ``retry_policy`` wraps both storages in :class:`~repro.core.retry.
+    RetryingStorage` so transient device faults are absorbed below the
+    checkpoint protocol.  :meth:`preempt` forwards the graceful-shutdown
+    budget to the engine and records what was abandoned; :meth:`close` is
+    idempotent and delivers a pending background error exactly once.
     """
 
     def __init__(
@@ -170,6 +221,8 @@ class CheckpointManager:
         storage,
         prefix: str = "ckpt/model",
         *,
+        engine: str = "direct",
+        fast_storage=None,
         keep_last: int = 5,
         keep_every: Optional[int] = None,
         retry_policy: Optional[RetryPolicy] = None,
@@ -177,33 +230,131 @@ class CheckpointManager:
         sync: bool = True,
         quantize: Optional[str] = None,
         io_threads: Optional[int] = None,
+        max_pending: int = 2,
+        cleanup_fast: bool = True,
+        drain_streams: int = 4,
+        drain_chunk: int = 8 << 20,
+        drain_stall_timeout: Optional[float] = None,
+        drain_requeue_limit: int = 3,
     ):
         if keep_last < 1:
             raise ValueError(f"keep_last must be >= 1, got {keep_last}")
         if keep_every is not None and keep_every < 1:
             raise ValueError(f"keep_every must be >= 1, got {keep_every}")
+        if engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+        if engine in ("bb", "asyncbb") and fast_storage is None:
+            raise ValueError(f"engine={engine!r} requires fast_storage")
         if retry_policy is not None:
             storage = RetryingStorage(storage, retry_policy)
+            if fast_storage is not None:
+                fast_storage = RetryingStorage(fast_storage, retry_policy)
         self.storage = storage
+        self.fast_storage = fast_storage
         self.prefix = prefix
+        self.engine_kind = engine
         self.keep_last = keep_last
         self.keep_every = keep_every
-        # the inner saver never GCs (keep=inf): deletion policy lives here,
+        # the slow-tier saver never GCs (keep=inf) and is used for restore
+        # and GC bookkeeping only: deletion policy lives in the manager,
         # where "valid" is a first-class concept
-        self.saver = CheckpointSaver(
-            storage, prefix, keep=_NO_SAVER_GC, n_shards=n_shards, sync=sync,
-            quantize=quantize, io_threads=io_threads,
-        )
+        saver_kw = dict(n_shards=n_shards, sync=sync, quantize=quantize,
+                        io_threads=io_threads)
+        self.saver = CheckpointSaver(storage, prefix, keep=_NO_SAVER_GC,
+                                     **saver_kw)
+        if engine == "direct":
+            self.engine = DirectCheckpointer(
+                storage, prefix, keep=_NO_SAVER_GC, **saver_kw)
+        elif engine == "async":
+            self.engine = AsyncCheckpointer(
+                storage, prefix, keep=_NO_SAVER_GC,
+                max_pending=max_pending, **saver_kw)
+            self.engine.on_committed = self._on_committed
+        elif engine == "bb":
+            self.engine = BurstBufferCheckpointer(
+                fast_storage, storage, prefix, keep=_NO_SAVER_GC,
+                cleanup_fast=cleanup_fast, drain_streams=drain_streams,
+                drain_chunk=drain_chunk,
+                drain_stall_timeout=drain_stall_timeout,
+                drain_requeue_limit=drain_requeue_limit, **saver_kw)
+        else:  # asyncbb
+            self.engine = AsyncBurstBufferCheckpointer(
+                fast_storage, storage, prefix, keep=_NO_SAVER_GC,
+                max_pending=max_pending, cleanup_fast=cleanup_fast,
+                drain_streams=drain_streams, drain_chunk=drain_chunk,
+                drain_stall_timeout=drain_stall_timeout,
+                drain_requeue_limit=drain_requeue_limit, **saver_kw)
+        if engine in ("bb", "asyncbb"):
+            self.engine.on_staged = self._on_staged
+            self.engine.on_drained = self._on_committed
+        self.fast_saver = getattr(self.engine, "fast_saver", None)
         self._dir, _ = _split_prefix(prefix)
-        self.blocked_s: List[float] = []
         self.gc_deleted: List[int] = []  # every step GC ever removed
+        self.abandoned_steps: List[int] = []  # given up by preempt()
+        self._sync = sync
+        self._closed = False
+        self._gc_lock = threading.Lock()
+        self._state_lock = threading.Lock()
+        self._step_states: "OrderedDict[int, str]" = OrderedDict()
+
+    # -- lifecycle state machine ----------------------------------------------
+    @property
+    def blocked_s(self) -> List[float]:
+        """Training-thread blocked time, straight from the engine."""
+        return self.engine.blocked_s
+
+    def _mark(self, step: int, state: str) -> None:
+        """Advance ``step``'s lifecycle state (monotonic: hooks firing out
+        of order can never move a step backwards).  Runs on the training
+        thread and on engine background threads."""
+        with self._state_lock:
+            cur = self._step_states.get(step)
+            if (state in _STATE_ORDER and cur in _STATE_ORDER
+                    and _STATE_ORDER[state] < _STATE_ORDER[cur]):
+                return
+            self._step_states[step] = state
+            self._step_states.move_to_end(step)
+            committed = [s for s, st in self._step_states.items()
+                         if st == COMMITTED]
+            for s in committed[:-_STATE_HISTORY]:
+                del self._step_states[s]
+        if metrics.enabled():
+            metrics.inc("ckpt.lifecycle_transitions", 1, state=state)
+
+    def step_states(self) -> Dict[int, str]:
+        """Snapshot of the per-step lifecycle map (newest last)."""
+        with self._state_lock:
+            return dict(self._step_states)
+
+    def _on_staged(self, step: int) -> None:
+        """Engine hook: the step committed at the preemption tier."""
+        self._mark(step, STAGED)
+
+    def _on_committed(self, step: int) -> None:
+        """Engine hook: the step committed at the final tier.  Deferred
+        retention runs *here* — never earlier, so an undrained step can't
+        be collected out from under a preemption restart."""
+        self._mark(step, COMMITTED)
+        self.gc()
 
     # -- save + retention ------------------------------------------------------
-    def save(self, step: int, tree: Any,
-             extra_meta: Optional[dict] = None) -> SaveResult:
-        r = self.saver.save(step, tree, extra_meta)
-        self.blocked_s.append(r.seconds)
-        self.gc()
+    def save(self, step: int, tree: Any, extra_meta: Optional[dict] = None):
+        """Save through the engine.  Returns its native result — a
+        :class:`~repro.core.checkpoint.SaveResult` for the synchronous
+        engines, an :class:`~repro.core.async_checkpoint.AsyncSaveHandle`
+        for the async ones."""
+        if self._closed:
+            raise RuntimeError("save() on a closed CheckpointManager")
+        r = self.engine.save(step, tree, extra_meta)
+        self._mark(step, SNAPSHOTTED)
+        if self.engine_kind == "direct":
+            # synchronous single-tier commit: the save call was the whole
+            # lifecycle, and GC stays inline (back-compat with PR 8)
+            self._mark(step, STAGED)
+            self._on_committed(step)
+        elif self.engine_kind == "bb":
+            # save() blocked through the fast-tier write: already staged
+            self._mark(step, STAGED)
         return r
 
     def retained_steps(self) -> List[int]:
@@ -220,39 +371,61 @@ class CheckpointManager:
         return sorted(retained)
 
     def gc(self) -> List[int]:
-        """Apply retention; return the steps deleted.
+        """Apply retention on the final (slow) tier; return the steps
+        deleted.
 
         Ordering is crash-safe: the marker is rewritten to the retained set
         *before* any file is deleted, so a crash mid-GC strands extra files
         (reclaimed by the next GC) but never publishes a marker whose steps
         are gone.  The latest valid step is always in the retained set —
-        GC can never delete the only restore target.
+        GC can never delete the only restore target.  With a background
+        engine this runs on the engine's commit thread (serialized with its
+        marker publishes); the lock only guards against a concurrent
+        user-initiated call.  Steps staged on the fast tier but not yet
+        drained are untouchable by construction: they have no slow-tier
+        files, and the engine's own fast-tier cleanup never evicts the
+        newest or still-pending steps.
         """
-        steps = list_steps(self.storage, self.prefix)
-        if not steps:
-            return []
-        retained = set(self.retained_steps())
-        doomed = [s for s in steps if s not in retained]
-        lv = latest_valid_step(self.storage, self.prefix)
-        latest = lv if lv is not None else max(retained)
-        marker = json.dumps(
-            dict(latest=latest, all_steps=sorted(retained))).encode()
-        write_marker(self.storage, self.saver._marker_path(), marker,
-                     sync=self.saver.sync)
-        for s in doomed:
-            self.saver._delete_step(s)
-        self.gc_deleted.extend(doomed)
-        return doomed
+        with self._gc_lock:
+            steps = list_steps(self.storage, self.prefix)
+            if not steps:
+                return []
+            retained = set(self.retained_steps())
+            doomed = [s for s in steps if s not in retained]
+            lv = latest_valid_step(self.storage, self.prefix)
+            latest = lv if lv is not None else max(retained)
+            marker = json.dumps(
+                dict(latest=latest, all_steps=sorted(retained))).encode()
+            write_marker(self.storage, self.saver._marker_path(), marker,
+                         sync=self.saver.sync)
+            for s in doomed:
+                self.saver._delete_step(s)
+            self.gc_deleted.extend(doomed)
+            return doomed
 
     # -- introspection ---------------------------------------------------------
     def all_steps(self) -> List[int]:
+        """Steps on the final (slow) tier — the set retention governs."""
         return list_steps(self.storage, self.prefix)
 
+    def fast_steps(self) -> List[int]:
+        """Steps on the fast tier (``[]`` for single-tier engines)."""
+        if self.fast_storage is None:
+            return []
+        return list_steps(self.fast_storage, self.prefix)
+
     def valid_steps(self) -> List[int]:
-        return valid_steps(self.storage, self.prefix)
+        """Structurally-valid steps across **both** tiers: a step staged on
+        the fast tier but not yet drained is restorable (the
+        preemption-restart contract)."""
+        vs: Set[int] = set(valid_steps(self.storage, self.prefix))
+        if self.fast_storage is not None:
+            vs |= set(valid_steps(self.fast_storage, self.prefix))
+        return sorted(vs)
 
     def latest_valid(self) -> Optional[int]:
-        return latest_valid_step(self.storage, self.prefix)
+        vs = self.valid_steps()
+        return vs[-1] if vs else None
 
     def latest_step(self) -> Optional[int]:
         """Newest *restorable* step (the Trainer's resume entry point) —
@@ -260,21 +433,41 @@ class CheckpointManager:
         return self.latest_valid()
 
     # -- restore ---------------------------------------------------------------
+    def _tiers(self) -> List[Tuple[Any, CheckpointSaver]]:
+        """(storage, saver) pairs in restore-preference order: fast tier
+        first (it holds the newest data and reads faster), slow second."""
+        out: List[Tuple[Any, CheckpointSaver]] = []
+        if self.fast_saver is not None:
+            out.append((self.fast_storage, self.fast_saver))
+        out.append((self.storage, self.saver))
+        return out
+
     def restore(self, step: Optional[int] = None
                 ) -> Tuple[Dict[str, Any], dict, int]:
         """Restore ``step`` (or the newest restorable step), walking back
-        past corrupt/torn/unsynced checkpoints.  Returns
+        past corrupt/torn/unsynced checkpoints across both tiers.  Returns
         ``(flat, meta, step_restored)``.
         """
         if step is not None:
-            flat, meta = self.saver.restore(step)
-            return flat, meta, step
+            for storage, saver in self._tiers():
+                if storage is not self.storage and \
+                        not validate_step(storage, self.prefix, step):
+                    continue
+                try:
+                    flat, meta = saver.restore(step)
+                    return flat, meta, step
+                except (OSError, ValueError, KeyError):
+                    if storage is self.storage:
+                        raise  # slow tier was the last resort: error parity
         for s in reversed(self.valid_steps()):
-            try:
-                flat, meta = self.saver.restore(s)
-                return flat, meta, s
-            except (OSError, ValueError, KeyError):
-                continue  # damage validate_step can't see (e.g. bad JSON field)
+            for storage, saver in self._tiers():
+                if not validate_step(storage, self.prefix, s):
+                    continue
+                try:
+                    flat, meta = saver.restore(s)
+                    return flat, meta, s
+                except (OSError, ValueError, KeyError):
+                    continue  # damage validate_step can't see (bad JSON field)
         raise FileNotFoundError(
             f"no restorable checkpoint under {self.prefix}")
 
@@ -318,7 +511,33 @@ class CheckpointManager:
 
     # -- checkpointer-interface parity ----------------------------------------
     def wait(self) -> None:
-        return
+        """Block until every issued save has committed at the final tier;
+        surfaces the first background error (report-once, engine contract)."""
+        self.engine.wait()
+
+    def preempt(self, deadline_s: Optional[float] = None) -> PreemptionReport:
+        """Graceful-shutdown budget, forwarded to the engine: stop issuing
+        new saves, promote the newest in-flight save to its preemption-tier
+        commit within ``deadline_s``, abandon the rest.  Abandoned steps
+        are recorded in :attr:`abandoned_steps` and marked
+        :data:`ABANDONED` in the lifecycle map."""
+        report = self.engine.preempt(deadline_s)
+        if report.committed_step is None:
+            # the engine's view may lag (e.g. queued cleanups); fall back to
+            # what is actually restorable across both tiers
+            report.committed_step = self.latest_valid()
+        self.abandoned_steps.extend(report.abandoned_steps)
+        for s in report.abandoned_steps:
+            self._mark(s, ABANDONED)
+        return report
 
     def close(self) -> None:
-        return
+        """Idempotent shutdown.  The first call closes the engine and lets
+        its never-delivered background error (if any) surface; later calls
+        are no-ops — the error is delivered exactly once, matching the
+        :class:`~repro.core.burst_buffer.DirectCheckpointer` close()
+        discipline even when the engine still has pending saves."""
+        if self._closed:
+            return
+        self._closed = True
+        self.engine.close()

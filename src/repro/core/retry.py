@@ -43,11 +43,16 @@ from __future__ import annotations
 import random
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Callable, Deque, List, Optional
 
 from .. import metrics
 from .storage import Storage
+
+# `RetryingStorage.give_up_log` keeps only this many most-recent entries
+# (the exact total lives in the `gave_up` counter / `storage.gave_up` metric).
+GIVE_UP_LOG_LIMIT = 100
 
 #: OSError subclasses that signal a semantic problem, not a flaky device.
 _NON_RETRYABLE = (FileNotFoundError, PermissionError, IsADirectoryError,
@@ -153,7 +158,10 @@ class RetryingStorage(Storage):
         self._lock = threading.Lock()
         self.retries = 0    # attribute mirrors of the live counters, for
         self.gave_up = 0    # tests/benchmarks with metrics disabled
-        self.give_up_log: List[tuple] = []  # (op, repr(exc)) per give-up
+        # ring of the most recent give-ups: long soak runs against a flaky
+        # tier must not grow memory unboundedly; ``gave_up`` stays exact
+        self.give_up_log: Deque[tuple] = deque(
+            maxlen=GIVE_UP_LOG_LIMIT)  # (op, repr(exc)) per give-up
 
     def _call(self, op: str, fn: Callable, *args, **kwargs):
         def _note_retry(_attempt: int, _exc: BaseException) -> None:

@@ -19,8 +19,12 @@ Integrates the paper's pieces end-to-end:
   error (the same contract as ``BurstBufferCheckpointer.wait``);
 * **restart**: on construction the trainer restores the newest checkpoint
   if one exists (crash/preemption recovery);
-* **preemption**: SIGTERM triggers checkpoint-and-stop at the next step
-  boundary;
+* **preemption**: SIGTERM (or :meth:`Trainer.preempt`) triggers
+  checkpoint-and-stop at the next step boundary; with a
+  ``preempt_deadline_s`` budget and an engine that supports
+  ``preempt()``, older queued snapshots are abandoned and the final save
+  is promoted to its durability tier within the deadline — the outcome
+  lands in :attr:`Trainer.preemption_report`;
 * **straggler monitor**: per-step data-wait vs compute-time is recorded
   (paper Fig. 6: when prefetch works, data-wait ≈ 0); a sustained data-wait
   fraction above ``straggler_threshold`` is surfaced in ``report()``.
@@ -49,6 +53,7 @@ class Trainer:
         checkpointer=None,                     # Direct/BurstBuffer checkpointer
         ckpt_every: int = 0,
         resume: bool = True,
+        preempt_deadline_s: Optional[float] = None,
         straggler_threshold: float = 0.2,
         install_sigterm: bool = False,
         on_step: Optional[Callable[[int, Dict], None]] = None,
@@ -65,8 +70,11 @@ class Trainer:
         self.stall_detector = stall_detector
         self.history: List[Dict] = []
         self._stop_requested = False
+        self._preempt_deadline_s = preempt_deadline_s
         self._pending_saves: List[Any] = []  # AsyncSaveHandle-like objects
         self.recovered_step: Optional[int] = None
+        self.preemption_report = None        # PreemptionReport after a stop
+        self.preempt_s: Optional[float] = None  # stop-path wall time
         if install_sigterm:
             signal.signal(signal.SIGTERM, self._handle_sigterm)
         if resume and checkpointer is not None:
@@ -89,6 +97,17 @@ class Trainer:
 
     def request_stop(self) -> None:
         """Graceful-preemption hook (same path as SIGTERM)."""
+        self._stop_requested = True
+
+    def preempt(self, deadline_s: Optional[float] = None) -> None:
+        """Graceful preemption with a shutdown budget: stop at the next
+        step boundary, issue the final save, and give the checkpointer
+        ``deadline_s`` seconds (overriding the constructor default) to
+        promote the newest in-flight save to its durability tier —
+        abandoning older ones.  The outcome lands in
+        :attr:`preemption_report`."""
+        if deadline_s is not None:
+            self._preempt_deadline_s = deadline_s
         self._stop_requested = True
 
     @property
@@ -132,10 +151,19 @@ class Trainer:
 
             if self._stop_requested:
                 if self.checkpointer is not None:
+                    t_pre = time.monotonic()
                     handle = self._save_checkpoint(step)
-                    if handle is not None:
+                    preempt = getattr(self.checkpointer, "preempt", None)
+                    if callable(preempt):
+                        # graceful-shutdown budget: promote the newest
+                        # in-flight save (this one) within the deadline,
+                        # abandon older queued snapshots
+                        self.preemption_report = preempt(
+                            self._preempt_deadline_s)
+                    elif handle is not None:
                         # preemption save must be durable before we stop
                         handle.result()
+                    self.preempt_s = time.monotonic() - t_pre
                 break
         # surface any background write failure that settled during the run
         # (in-flight saves stay pending: wait_for_checkpoints() drains them)
@@ -173,6 +201,8 @@ class Trainer:
         error = None
         for h in self._pending_saves:
             if h.done():
+                if getattr(h, "cancelled", lambda: False)():
+                    continue  # abandoned by preempt(): no error to report
                 e = h.exception()
                 if e is not None and error is None:
                     error = e
@@ -216,6 +246,17 @@ class Trainer:
             ),
             pending_async_saves=sum(
                 1 for h in self._pending_saves if not h.done()
+            ),
+            preemption=(
+                dict(
+                    committed_step=self.preemption_report.committed_step,
+                    abandoned_steps=list(
+                        self.preemption_report.abandoned_steps),
+                    deadline_s=self.preemption_report.deadline_s,
+                    elapsed_s=self.preemption_report.elapsed_s,
+                    deadline_met=self.preemption_report.deadline_met,
+                    preempt_s=self.preempt_s,
+                ) if self.preemption_report is not None else None
             ),
             stalls=(self.stall_detector.summary()
                     if self.stall_detector is not None else None),

@@ -129,3 +129,174 @@ class TestCachePrefetch:
 
         with pytest.raises(RuntimeError):
             list(Dataset.range(10).map(fail).prefetch(2))
+
+
+# ---------------------------------------------------------------------------
+# O(1) iterator resume (PR 10): interleave_order replica, seekable shard
+# streaming, ResumableIterator seek
+# ---------------------------------------------------------------------------
+from repro.core.dataset import (ResumableIterator, interleave_order,
+                                sharded_record_dataset)
+from repro.core.faults import FaultyStorage
+from repro.core.storage import NativeStorage
+
+
+class TestInterleaveOrder:
+    def _real_order(self, counts, cyc, blk):
+        """Ground truth: run the actual interleave over (src, idx) pairs."""
+        ds = Dataset.from_tensor_slices(list(range(len(counts)))).interleave(
+            lambda s: iter([(s, i) for i in range(counts[s])]),
+            cycle_length=cyc, block_length=blk)
+        return list(ds)
+
+    @pytest.mark.parametrize("counts,cyc,blk", [
+        ([4, 4, 4], 2, 2),        # exact block multiples (empty-turn case)
+        ([5, 3, 7, 2, 6], 3, 2),  # uneven tails
+        ([8], 4, 3),              # single source, cycle > sources
+        ([2, 2], 4, 1),
+        ([0, 3, 4], 2, 2),        # empty source retires on first turn
+        ([3, 0, 0, 5, 1], 2, 3),
+        ([6, 6], 1, 4),           # degenerate cycle: pure concatenation
+    ])
+    def test_matches_real_interleave(self, counts, cyc, blk):
+        assert interleave_order(counts, cyc, blk) == \
+            self._real_order(counts, cyc, blk)
+
+    @given(st.lists(st.integers(0, 9), min_size=1, max_size=6),
+           st.integers(1, 5), st.integers(1, 4))
+    @settings(max_examples=30, deadline=None)
+    def test_matches_real_interleave_property(self, counts, cyc, blk):
+        assert interleave_order(counts, cyc, blk) == \
+            self._real_order(counts, cyc, blk)
+
+    def test_validates_args(self):
+        with pytest.raises(ValueError):
+            interleave_order([1], cycle_length=0)
+        with pytest.raises(ValueError):
+            interleave_order([1], block_length=0)
+
+
+class TestShardedRecordDataset:
+    REC = 8
+
+    def _mk_shards(self, storage, byte_sizes):
+        paths = []
+        for j, n in enumerate(byte_sizes):
+            p = f"data/shard{j}.rec"
+            storage.write_file(p, bytes((j * 16 + k) % 251 for k in range(n)))
+            paths.append(p)
+        return paths
+
+    def test_seek_tail_matches_full_stream(self, tmp_storage):
+        # short final records at 20 (4 bytes) and 33 (1 byte)
+        paths = self._mk_shards(tmp_storage, [24, 20, 8, 33, 16])
+        full = list(sharded_record_dataset(
+            tmp_storage, paths, self.REC, cycle_length=2, block_length=2,
+            seed=3))
+        n = len(full)
+        for start in (1, 3, n // 2, n - 1, n, n + 7):
+            tail = list(sharded_record_dataset(
+                tmp_storage, paths, self.REC, cycle_length=2, block_length=2,
+                seed=3, start=start))
+            assert tail == full[start:], f"start={start}"
+
+    def test_seek_reads_no_skipped_records(self, tmp_storage):
+        """Positioning is arithmetic: only the tail's records are read."""
+        paths = self._mk_shards(tmp_storage, [24, 20, 8, 33, 16])
+        full = list(sharded_record_dataset(tmp_storage, paths, self.REC,
+                                           seed=1))
+        counting = FaultyStorage(tmp_storage)  # unarmed: just an op log
+        start = len(full) - 3
+        tail = list(sharded_record_dataset(counting, paths, self.REC,
+                                           seed=1, start=start))
+        assert tail == full[start:]
+        reads = [e for e in counting.op_log if e[0].startswith("read")]
+        assert len(reads) == len(full) - start  # zero reads for the skip
+
+    def test_seed_changes_order(self, tmp_storage):
+        paths = self._mk_shards(tmp_storage, [32, 32, 32, 32, 32, 32])
+        a = list(sharded_record_dataset(tmp_storage, paths, self.REC, seed=0))
+        b = list(sharded_record_dataset(tmp_storage, paths, self.REC, seed=5))
+        assert sorted(a) == sorted(b) and a != b
+
+
+class TestResumableIteratorSeek:
+    DATA = [[f"e{e}r{i}" for i in range(10)] for e in range(3)]
+
+    def _seekable(self):
+        data = self.DATA
+        return lambda ep, start=0: Dataset.from_tensor_slices(
+            data[ep % len(data)][start:])
+
+    def _replay_only(self):
+        data = self.DATA
+        return lambda ep: Dataset.from_tensor_slices(data[ep % len(data)])
+
+    def test_seekability_detected_from_signature(self):
+        assert ResumableIterator(self._seekable()).state().get("seek") is True
+        assert "seek" not in ResumableIterator(self._replay_only()).state()
+        assert "seek" not in ResumableIterator(
+            Dataset.range(4)).state()  # plain Dataset: never seekable
+
+    def test_seek_restore_equals_replay_restore(self):
+        it = ResumableIterator(self._seekable(), epochs=2)
+        head = [next(it) for _ in range(7)]
+        st = it.state()
+        rest = list(it)  # uninterrupted continuation = ground truth
+
+        seeked = ResumableIterator(self._seekable(), epochs=2)
+        seeked.restore_state(st)
+        assert list(seeked) == rest
+
+        replayed = ResumableIterator(self._replay_only(), epochs=2)
+        replayed.restore_state(st)  # same dict, "seek" key ignored
+        assert list(replayed) == rest
+        assert head == self.DATA[0][:7]
+
+    def test_seek_restore_counts_metric(self):
+        from repro import metrics
+
+        it = ResumableIterator(self._seekable())
+        reg = metrics.start()
+        try:
+            it.restore_state({"epoch": 0, "offset": 4, "version": 1})
+            counters = reg.collect()["counters"]
+            assert sum(v for k, v in counters.items()
+                       if k.startswith("pipeline.resume_seeks")) == 1
+            assert not any(k.startswith("pipeline.resume_skipped")
+                           for k in counters)
+        finally:
+            metrics.stop()
+        assert next(it) == self.DATA[0][4]
+
+    def test_seek_past_epoch_end_rolls_epoch(self):
+        it = ResumableIterator(self._seekable(), epochs=2)
+        it.restore_state({"epoch": 0, "offset": len(self.DATA[0]),
+                          "version": 1})
+        assert next(it) == self.DATA[1][0]
+
+    def test_e2e_sharded_factory_seek_without_replay_io(self, tmp_storage):
+        rec = 8
+        paths = []
+        for j in range(4):
+            p = f"data/s{j}.rec"
+            tmp_storage.write_file(p, bytes(range(j * 32, j * 32 + 32)))
+            paths.append(p)
+
+        def factory_on(storage):
+            return lambda ep, start=0: sharded_record_dataset(
+                storage, paths, rec, cycle_length=2, block_length=2,
+                seed=ep, start=start)
+
+        it = ResumableIterator(factory_on(tmp_storage), epochs=1)
+        head = [next(it) for _ in range(9)]
+        st = it.state()
+        rest = list(it)
+
+        counting = FaultyStorage(tmp_storage)
+        it2 = ResumableIterator(factory_on(counting), epochs=1)
+        it2.restore_state(st)
+        assert list(it2) == rest
+        reads = [e for e in counting.op_log if e[0].startswith("read")]
+        assert len(reads) == len(rest)  # none of the 9 head records re-read
+        assert len(head) == 9

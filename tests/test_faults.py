@@ -10,6 +10,8 @@ injection point of its save/drain path, and under the torn-write and
 reordered-fsync crash models, not just clean op-boundary kills.
 """
 import tempfile
+import threading
+import time
 
 import numpy as np
 import pytest
@@ -469,3 +471,86 @@ class TestAsyncBBInjectionSweep:
                             fast, self.PREFIX).latest_step() == 2, ctx
                         step = self._assert_tier_restorable(slow, trees)
                         assert step == 1, ctx  # marker never advanced
+
+
+class TestHangModel:
+    """The stuck-op fault: the op blocks (bytes land on release), nothing
+    raises — the model drain watchdogs exist to detect."""
+
+    def test_hang_blocks_then_released_op_completes(self, tmp_storage):
+        f = FaultyStorage(tmp_storage).hang(n_ops=0)
+        done = threading.Event()
+
+        def writer():
+            f.write_file("a", b"payload")  # wedges here
+            done.set()
+
+        t = threading.Thread(target=writer, daemon=True)
+        t.start()
+        deadline = time.monotonic() + 5.0
+        while f.hung_now == 0 and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert f.hung_now == 1 and f.hung_ops == 1
+        assert not done.is_set()
+        assert not tmp_storage.exists("a")  # nothing raised, nothing landed
+        f.release_hung()
+        assert done.wait(5.0)
+        assert tmp_storage.read_file("a") == b"payload"  # bytes land on release
+        assert f.hung_now == 0
+
+    def test_hang_duration_self_releases(self, tmp_storage):
+        f = FaultyStorage(tmp_storage).hang(n_ops=0, duration=0.05)
+        t0 = time.monotonic()
+        f.write_file("a", b"x")
+        assert time.monotonic() - t0 >= 0.05
+        assert tmp_storage.read_file("a") == b"x"
+        assert f.hung_ops == 1
+
+    def test_hang_is_one_shot_unless_repeat(self, tmp_storage):
+        f = FaultyStorage(tmp_storage).hang(n_ops=0, duration=0.02)
+        f.write_file("a", b"1")
+        t0 = time.monotonic()
+        f.write_file("b", b"2")  # disarmed: no stall
+        assert time.monotonic() - t0 < 0.02
+        assert f.hung_ops == 1
+        f.hang(n_ops=0, duration=0.02, repeat=True)
+        f.write_file("c", b"3")
+        f.write_file("d", b"4")
+        assert f.hung_ops == 3  # both tripped while armed
+
+    def test_hang_on_path_substring_and_op_counting(self, tmp_storage):
+        f = FaultyStorage(tmp_storage).hang(on="marker", duration=0.05)
+        t0 = time.monotonic()
+        f.write_file("data-0", b"x")  # path doesn't match: no stall
+        assert time.monotonic() - t0 < 0.05
+        f.write_file("the/marker", b"y")
+        assert time.monotonic() - t0 >= 0.05
+        f.hang(n_ops=2, duration=0.03)
+        t1 = time.monotonic()
+        f.write_file("p", b"1")
+        f.write_file("q", b"2")  # two ops let through
+        assert time.monotonic() - t1 < 0.03
+        f.write_file("r", b"3")  # the third trips
+        assert time.monotonic() - t1 >= 0.03
+
+    def test_heal_unwedges_and_disarms(self, tmp_storage):
+        f = FaultyStorage(tmp_storage).hang(n_ops=0, repeat=True)
+        done = threading.Event()
+
+        def writer():
+            f.write_file("a", b"1")
+            done.set()
+
+        threading.Thread(target=writer, daemon=True).start()
+        deadline = time.monotonic() + 5.0
+        while f.hung_now == 0 and time.monotonic() < deadline:
+            time.sleep(0.005)
+        f.heal()
+        assert done.wait(5.0)
+        t0 = time.monotonic()
+        f.write_file("b", b"2")  # disarmed: immediate
+        assert time.monotonic() - t0 < 0.05
+
+    def test_invalid_duration_rejected(self, tmp_storage):
+        with pytest.raises(ValueError):
+            FaultyStorage(tmp_storage).hang(duration=-1.0)

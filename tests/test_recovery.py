@@ -22,7 +22,7 @@ from repro.core.checkpoint import CheckpointSaver
 from repro.core.dataset import Dataset, ResumableIterator
 from repro.core.faults import FaultInjected, FaultyStorage, TransientFault
 from repro.core.recovery import (CheckpointManager, latest_valid_step,
-                                 list_steps, validate_step)
+                                 list_steps, valid_steps, validate_step)
 from repro.core.retry import RetryPolicy, RetryingStorage
 from repro.core.storage import NativeStorage
 
@@ -542,3 +542,238 @@ class TestResumableIterator:
         with ResumableIterator(ds) as it:
             next(it)
         assert it._it is None
+
+
+# ---------------------------------------------------------------------------
+# fused manager (PR 10): lifecycle states, deferred GC, dual-tier restore
+# ---------------------------------------------------------------------------
+def _wait_until(cond, timeout=10.0):
+    import time
+
+    deadline = time.monotonic() + timeout
+    while not cond():
+        if time.monotonic() >= deadline:
+            return False
+        time.sleep(0.005)
+    return True
+
+
+class TestFusedManager:
+    def test_lifecycle_states_direct_engine(self, tmp_storage):
+        from repro.core.recovery import COMMITTED
+
+        mgr = CheckpointManager(tmp_storage, PREFIX)
+        mgr.save(1, small_tree(1))
+        assert mgr.step_states()[1] == COMMITTED
+
+    def test_lifecycle_states_async_engine(self, tmp_storage):
+        from repro.core.recovery import COMMITTED
+
+        mgr = CheckpointManager(tmp_storage, PREFIX, engine="async")
+        mgr.save(1, small_tree(1))
+        mgr.wait()
+        assert mgr.step_states()[1] == COMMITTED
+        mgr.close()
+
+    def test_gc_deferred_past_drain_commit(self):
+        """Retention must never collect a step staged on the fast tier but
+        not yet drained — it is the preemption-restart target."""
+        from repro.core.recovery import COMMITTED, STAGED
+
+        with tempfile.TemporaryDirectory() as d1, \
+                tempfile.TemporaryDirectory() as d2:
+            fast = NativeStorage(d1)
+            slow = FaultyStorage(NativeStorage(d2))
+            mgr = CheckpointManager(slow, PREFIX, engine="asyncbb",
+                                    fast_storage=fast, keep_last=2,
+                                    max_pending=2)
+            slow.hang(on=".data-", repeat=True)  # drains wedge forever
+            trees = {s: small_tree(s) for s in range(1, 6)}
+            for s in range(1, 6):
+                mgr.save(s, trees[s])
+            assert _wait_until(lambda: mgr.engine.pending() == 0)
+            # every step staged, none drained: GC has never run.  (Partial
+            # slow-tier files may exist — index/meta chunks drain on other
+            # streams — but nothing validates and nothing was collected.)
+            states = mgr.step_states()
+            assert all(states[s] == STAGED for s in range(1, 6))
+            assert valid_steps(slow, PREFIX) == []
+            assert mgr.gc_deleted == []
+            assert mgr.valid_steps() == [1, 2, 3, 4, 5]  # fast tier carries
+            assert mgr.latest_valid() == 5
+            flat, _, s = mgr.restore()
+            assert s == 5
+            np.testing.assert_array_equal(flat["w"], trees[5]["w"])
+            # un-wedge: drains commit in order, deferred GC kicks in
+            slow.heal()
+            mgr.wait()
+            assert mgr.step_states()[5] == COMMITTED
+            assert mgr.all_steps() == [4, 5]  # keep_last applied, at last
+            assert set(mgr.gc_deleted) == {1, 2, 3}
+            mgr.close()
+
+    def test_restore_falls_back_when_fast_tier_corrupt(self):
+        with tempfile.TemporaryDirectory() as d1, \
+                tempfile.TemporaryDirectory() as d2:
+            fast, slow = NativeStorage(d1), NativeStorage(d2)
+            mgr = CheckpointManager(slow, PREFIX, engine="bb",
+                                    fast_storage=fast, keep_last=3)
+            t = small_tree(1)
+            mgr.save(1, t)
+            mgr.wait()
+            # fast copy torn after the drain: restore must take the slow one
+            fast.write_file(f"{PREFIX}-1.data-00000-of-00001", b"xx")
+            flat, _, s = mgr.restore()
+            assert s == 1
+            np.testing.assert_array_equal(flat["w"], t["w"])
+            mgr.close()
+
+    def test_close_idempotent_and_error_exactly_once(self, tmp_storage):
+        faulty = FaultyStorage(tmp_storage).fail_on(".data-")
+        mgr = CheckpointManager(faulty, PREFIX, engine="async")
+        mgr.save(1, small_tree(1))  # background write will die
+        with pytest.raises(FaultInjected):
+            mgr.close()
+        mgr.close()  # second close: no-op, the error was delivered once
+        with pytest.raises(RuntimeError):
+            mgr.save(2, small_tree(2))
+
+    def test_close_with_pending_saves_drains_them(self):
+        with tempfile.TemporaryDirectory() as d1, \
+                tempfile.TemporaryDirectory() as d2:
+            fast, slow = NativeStorage(d1), NativeStorage(d2)
+            mgr = CheckpointManager(slow, PREFIX, engine="asyncbb",
+                                    fast_storage=fast, keep_last=3)
+            for s in (1, 2, 3):
+                mgr.save(s, small_tree(s))
+            mgr.close()  # drains the stager and the drain queue
+            mgr.close()  # idempotent
+            assert latest_valid_step(slow, PREFIX) == 3
+
+    def test_blocked_s_comes_from_engine(self, tmp_storage):
+        mgr = CheckpointManager(tmp_storage, PREFIX, engine="async")
+        mgr.save(1, small_tree(1))
+        mgr.wait()
+        assert mgr.blocked_s is mgr.engine.blocked_s
+        assert len(mgr.blocked_s) == 1
+        mgr.close()
+
+    def test_engine_validation(self, tmp_storage):
+        with pytest.raises(ValueError):
+            CheckpointManager(tmp_storage, PREFIX, engine="warp")
+        with pytest.raises(ValueError):
+            CheckpointManager(tmp_storage, PREFIX, engine="asyncbb")
+
+
+# ---------------------------------------------------------------------------
+# satellite: kill sweep through the fused manager + asyncbb engine
+# ---------------------------------------------------------------------------
+class TestFusedKillSweep:
+    """The TestKillSweep guarantee, re-proven through the fused
+    manager+asyncbb save/drain/GC path: die (or wedge) at every slow-tier
+    write op and the restart — on a fresh node with an empty fast tier —
+    still lands bit-identical params with no skipped/replayed samples."""
+
+    def _fused_mgr(self, fast, slow, **kw):
+        kw.setdefault("keep_last", 2)
+        return CheckpointManager(slow, PREFIX, engine="asyncbb",
+                                 fast_storage=fast, **kw)
+
+    def _finish_fused(self, slow_storage, golden_w, golden_stream, ctx=""):
+        """Restart on a fresh node: empty fast tier, healed slow tier."""
+        with tempfile.TemporaryDirectory() as d_fast:
+            mgr = self._fused_mgr(NativeStorage(d_fast), slow_storage)
+            consumed = []
+            tr = make_trainer(mgr, consumed)
+            start = tr.recovered_step or 0
+            tr.run(N_STEPS - start)
+            tr.wait_for_checkpoints()
+            mgr.close()
+            tr.close()
+            assert float(np.asarray(tr.state["w"])) == golden_w, ctx
+            assert consumed == golden_stream[start:], ctx
+            return start
+
+    def _count_slow_write_ops(self):
+        with tempfile.TemporaryDirectory() as d1, \
+                tempfile.TemporaryDirectory() as d2:
+            slow = FaultyStorage(NativeStorage(d2))
+            mgr = self._fused_mgr(NativeStorage(d1), slow)
+            tr = make_trainer(mgr, [])
+            tr.run(N_STEPS)
+            tr.wait_for_checkpoints()
+            mgr.close()
+            tr.close()
+            return sum(1 for op, _, _ in slow.op_log
+                       if op.startswith("write") or op == "append_file")
+
+    @pytest.mark.parametrize("model", ["clean", "torn"])
+    def test_kill_at_every_slow_write_op(self, model):
+        golden_w, golden_stream = golden_run()
+        n_ops = self._count_slow_write_ops()
+        assert n_ops >= 8  # drain chunks + markers + GC marker rewrites
+        for k in range(n_ops):
+            with tempfile.TemporaryDirectory() as d1, \
+                    tempfile.TemporaryDirectory() as d2:
+                slow_inner = NativeStorage(d2)
+                slow = FaultyStorage(slow_inner)
+                if model == "clean":
+                    slow.fail_after(k)
+                else:
+                    slow.torn_write(0.5, n_ops=k)
+                mgr = self._fused_mgr(NativeStorage(d1), slow)
+                tr = make_trainer(mgr, [])
+                tr.run(N_STEPS)  # stages are fast-tier: the run completes
+                with pytest.raises(FaultInjected):
+                    tr.wait_for_checkpoints()  # the drain error surfaces
+                try:
+                    mgr.close()
+                except FaultInjected:
+                    pass  # later drains of the same sticky cascade
+                tr.close()
+                self._finish_fused(slow_inner, golden_w, golden_stream,
+                                   ctx=f"model={model}, op {k}/{n_ops}")
+
+    def test_reordered_fsync_crash_on_slow_tier(self):
+        golden_w, golden_stream = golden_run()
+        for j in (2, 4, N_STEPS - 1):
+            for keep in ("last", "none"):
+                with tempfile.TemporaryDirectory() as d1, \
+                        tempfile.TemporaryDirectory() as d2:
+                    slow_inner = NativeStorage(d2)
+                    slow = FaultyStorage(slow_inner).reordered_fsync()
+                    mgr = self._fused_mgr(NativeStorage(d1), slow)
+                    tr = make_trainer(mgr, [])
+                    tr.run(j)
+                    tr.wait_for_checkpoints()
+                    mgr.close()
+                    tr.close()
+                    slow.crash(keep=keep)  # power loss: volatile writes gone
+                    slow.heal()
+                    self._finish_fused(
+                        slow_inner, golden_w, golden_stream,
+                        ctx=f"crash(keep={keep}) after {j}")
+
+    def test_hung_drain_absorbed_by_watchdog(self):
+        """A wedged (not dead) slow tier mid-run: the watchdog re-queues
+        the chunk and the run itself completes bit-identical — no restart
+        needed at all."""
+        golden_w, golden_stream = golden_run()
+        for arm in ({"on": ".data-"}, {"n_ops": 2, "ops": ("write_range",)}):
+            with tempfile.TemporaryDirectory() as d1, \
+                    tempfile.TemporaryDirectory() as d2:
+                slow = FaultyStorage(NativeStorage(d2))
+                mgr = self._fused_mgr(NativeStorage(d1), slow,
+                                      drain_stall_timeout=0.1,
+                                      drain_streams=2, drain_chunk=64)
+                slow.hang(**arm)  # one-shot wedge: the re-queue succeeds
+                consumed = []
+                tr = make_trainer(mgr, consumed)
+                tr.run(N_STEPS)
+                tr.wait_for_checkpoints()
+                assert mgr.engine.drain_stalls >= 1, arm
+                assert float(np.asarray(tr.state["w"])) == golden_w
+                assert consumed == golden_stream
+                slow.heal()  # un-park the leaked stream
+                mgr.close()
+                tr.close()

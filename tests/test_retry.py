@@ -298,3 +298,22 @@ class TestSleepHook:
             # two retries of <=0.2 s modelled backoff -> milliseconds wall
             assert time.monotonic() - t0 < 1.0
             assert rs.retries == 2
+
+
+class TestGiveUpLogRing:
+    def test_log_bounded_counter_exact(self, tmp_storage):
+        """A long soak against a dead tier must not grow memory: the log is
+        a ring of the last GIVE_UP_LOG_LIMIT entries, ``gave_up`` is exact."""
+        from repro.core.retry import GIVE_UP_LOG_LIMIT
+
+        f = FaultyStorage(tmp_storage).fail_after(0, ops=("read",))
+        rs = RetryingStorage(f, RetryPolicy(max_attempts=1))
+        n = GIVE_UP_LOG_LIMIT + 20
+        for i in range(n):
+            with pytest.raises(FaultInjected):
+                rs.read_file(f"p{i:04d}")
+        assert rs.gave_up == n
+        assert len(rs.give_up_log) == GIVE_UP_LOG_LIMIT
+        # the ring keeps the newest entries, oldest evicted first
+        assert f"p{n - 1:04d}" in rs.give_up_log[-1][1]
+        assert f"p{n - GIVE_UP_LOG_LIMIT:04d}" in rs.give_up_log[0][1]
